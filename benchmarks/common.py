@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: timing + tiny training harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time in microseconds (jit'd fn, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def train_seqrec(model, data, *, steps: int, batch_size: int = 64,
+                 lr: float = 3e-3, eval_every: int = 0, seed: int = 0):
+    """Small-scale training used by the paper-table benchmarks.
+    Returns (params, ndcg@10 on the test split, ckpt_bytes)."""
+    from repro.nn import module as nn
+    from repro.train.loop import TrainConfig, Trainer
+    from repro.train.metrics import ndcg_at_k
+    from repro.train.optimizer import OptConfig
+
+    if model.cfg.loss == "sampled_bce":
+        data_fn = lambda s: data.train_batch(    # noqa: E731
+            s, batch_size, n_negatives=model.cfg.n_negatives)
+    elif model.cfg.arch == "bert4rec":
+        from repro.models.sequential import mask_batch
+
+        def data_fn(s):
+            b = data.train_batch(s, batch_size)
+            seq = jnp.asarray(np.where(b["labels"] > 0, b["labels"], 0))
+            ms, tg = mask_batch(jax.random.PRNGKey(s), seq,
+                                model.cfg.mask_prob, model.cfg.mask_id)
+            return {"seq": ms, "targets": tg}
+    else:
+        data_fn = lambda s: data.train_batch(s, batch_size)  # noqa: E731
+
+    tr = Trainer(model, OptConfig(lr=lr),
+                 TrainConfig(steps=steps, batch_size=batch_size,
+                             log_every=max(steps // 4, 1), eval_every=0),
+                 data_fn=data_fn)
+    params, _ = tr.run(rng=jax.random.PRNGKey(seed))
+
+    users = list(range(0, data.n_users_eff, max(data.n_users_eff // 256, 1)))
+    ev = data.eval_batch(users, split="test")
+    scores = jax.jit(model.score_last)(params, jnp.asarray(ev["seq"]))
+    ndcg = float(jnp.mean(ndcg_at_k(scores, jnp.asarray(ev["target"]))))
+    ckpt_bytes = nn.param_bytes(params)
+    return params, ndcg, ckpt_bytes

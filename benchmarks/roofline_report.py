@@ -1,0 +1,104 @@
+"""Generate the §Roofline markdown table from the dry-run records.
+
+MODEL_FLOPS convention: 6·N·D for dense-LM training (N params, D tokens),
+6·N_active·D for MoE; 2·N·D for prefill; 2·N_active·B per decoded token.
+The ratio MODEL_FLOPS / (HLO_FLOPs·chips) flags remat/redundancy waste
+(remat alone puts the useful fraction near ~0.75 of 4/3-inflated
+training FLOPs; values far below that mean replicated or padded work).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [mesh-dir ...]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "dryrun")
+
+LM_ARCHS = {"mixtral-8x7b": "mixtral_8x7b", "olmoe-1b-7b": "olmoe_1b_7b",
+            "stablelm-12b": "stablelm_12b", "qwen3-14b": "qwen3_14b",
+            "stablelm-1.6b": "stablelm_1_6b"}
+
+SHAPE_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                "decode_32k": (1, 128), "long_500k": (1, 1)}
+
+
+def model_flops(arch: str, shape: str):
+    if arch not in LM_ARCHS:
+        return None
+    import importlib
+    cfg = importlib.import_module(
+        f"repro.configs.{LM_ARCHS[arch]}").FULL
+    n_active = cfg.active_param_count()
+    s, b = SHAPE_TOKENS[shape]
+    tokens = s * b
+    if shape == "train_4k":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def load(mesh_dir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ROOT, mesh_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+PEAK = 197e12
+
+
+def table(mesh_dir: str) -> str:
+    """compute* = analytically-corrected compute term for LM cells:
+    jax.lax.scan bodies are counted ONCE by XLA cost analysis, so the
+    HLO compute term undercounts scanned layers by ~n_layers; we take
+    max(HLO term, MODEL_FLOPS/(chips·peak)).  'frac' = corrected
+    compute / dominant term — the roofline fraction."""
+    rows = ["| arch | shape | compute* s | memory s | collective s | "
+            "bottleneck | frac | HLO GFLOP/dev | model/HLO | temp GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh_dir):
+        a, s = r["arch"], r["shape"]
+        if "skipped" in r:
+            rows.append(f"| {a} | {s} | — | — | — | *skip: "
+                        f"sub-quadratic-attention rule* | — | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {a} | {s} | ERROR | | | | | | | |")
+            continue
+        t = r["roofline_terms_s"]
+        mf = model_flops(a, s)
+        chips = r["n_chips"]
+        comp = t["compute_s"]
+        ratio = "—"
+        if mf and r["flops_per_device"]:
+            ratio = f"{mf / (r['flops_per_device'] * chips):.2f}"
+            comp = max(comp, mf / (chips * PEAK))
+        dom = max(comp, t["memory_s"], t["collective_s"])
+        frac = comp / dom if dom else 0.0
+        bneck = ("compute" if comp == dom else
+                 "memory" if t["memory_s"] == dom else "collective")
+        temp = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+        rows.append(
+            f"| {a} | {s} | {comp:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | {bneck} | {frac:.2f} "
+            f"| {r['flops_per_device']/1e9:.1f} | {ratio} | {temp:.1f} |")
+    return "\n".join(rows)
+
+
+def main():
+    dirs = sys.argv[1:] or ["pod16x16", "pod2x16x16", "pod16x16-opt"]
+    for d in dirs:
+        if not os.path.isdir(os.path.join(ROOT, d)):
+            continue
+        print(f"\n### mesh {d}\n")
+        print(table(d))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Benchmark harness — one function per paper table/figure + the
+serving hot-path microbench and the dry-run roofline reader.
+
+  table2_memory     : paper Table 2  (PQ memory analysis per dataset)
+  table45_strategies: paper Tables 4/5 (strategy × backbone NDCG + size,
+                      reduced scale; full run = examples/paper_validation)
+  fig3_grid         : paper Fig. 3  (code length m × embedding size d)
+  fig4_tradeoff     : paper Fig. 4  (model size vs NDCG, base vs RecJPQ)
+  jpq_scoring       : serving hot path — full-table vs JPQ-partial-score
+                      vs Pallas kernel (interpret), us/call + bytes moved
+  roofline          : aggregates experiments/dryrun JSONs (§Roofline)
+
+Output: ``name,us_per_call,derived`` CSV rows (derived = the metric the
+paper's table reports).  ``--fast`` trims training steps for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import time_fn, train_seqrec  # noqa: E402
+from repro.core import EmbeddingConfig, build_codebook  # noqa: E402
+from repro.core.api import compression_report  # noqa: E402
+
+
+def _row(name, us, derived):
+    print(f"{name},{us if us is not None else ''},{derived}", flush=True)
+
+
+# ----------------------------------------------------------- Table 2
+
+def table2_memory():
+    """PQ impact on embedding-tensor memory (d=512 fp32, like the paper)."""
+    datasets = [("MovieLens-1M", 3416), ("Booking.com", 34742),
+                ("Gowalla", 1_280_969)]
+    for name, n in datasets:
+        base = n * 512 * 4
+        for m in (2, 8, 32):
+            rep = compression_report(EmbeddingConfig(
+                n_items=n, d=512, kind="jpq", m=m, b=256))
+            _row(f"table2/{name}/m={m}", None,
+                 f"{rep['pct_of_base']:.3f}%_of_{base/1e6:.2f}MB")
+
+
+# -------------------------------------------------------- Tables 4/5
+
+def _make_data(profile: str, fast: bool):
+    from repro.data.sequences import SeqDataConfig, SyntheticSequences
+    if profile == "ml1m":      # dense, no long tail
+        cfg = SeqDataConfig(n_users=300 if fast else 800, n_items=240,
+                            zipf_a=0.3, min_len=12, max_len=60,
+                            seq_len=32, seed=0)
+    else:                      # gowalla-like long tail
+        cfg = SeqDataConfig(n_users=400 if fast else 1200, n_items=2000,
+                            zipf_a=1.3, min_len=6, max_len=30,
+                            seq_len=24, seed=1)
+    return SyntheticSequences(cfg)
+
+
+def _variant_model(arch, data, variant, d_model=64, m=8, b=64):
+    from repro.models.sequential import SeqRecConfig, SeqRecModel
+    n_items = data.cfg.n_items
+    codes = None
+    if variant.startswith("jpq"):
+        strat = variant.split("-")[1]
+        u, i = data.train_interactions()
+        codes = build_codebook(strat, n_items + 2, m, b,
+                               interactions=(u, i + 1),
+                               n_users=data.n_users_eff, seed=0,
+                               **({"epochs": 3} if strat == "bpr" else {}))
+        emb = EmbeddingConfig(0, 0, kind="jpq", m=m, b=b)
+    elif variant == "qr":
+        emb = EmbeddingConfig(0, 0, kind="qr")
+    else:
+        emb = None
+    cfg = SeqRecConfig(arch=arch, n_items=n_items, max_len=data.cfg.seq_len,
+                       d_model=d_model, n_layers=2, n_heads=2, d_ff=128,
+                       embedding=emb)
+    return SeqRecModel(cfg, codes=codes)
+
+
+def table45_strategies(fast: bool = True):
+    """Reduced-scale Tables 4/5: NDCG@10 + relative model size."""
+    steps = 150 if fast else 600
+    archs = ["sasrec"] if fast else ["sasrec", "gru4rec"]
+    for profile in (["gowalla"] if fast else ["ml1m", "gowalla"]):
+        data = _make_data(profile, fast)
+        for arch in archs:
+            base_bytes = None
+            for variant in ["base", "qr", "jpq-random", "jpq-svd",
+                            "jpq-bpr"]:
+                model = _variant_model(arch, data, variant)
+                _, ndcg, nbytes = train_seqrec(model, data, steps=steps)
+                if variant == "base":
+                    base_bytes = nbytes
+                rel = 100.0 * nbytes / base_bytes
+                _row(f"table45/{profile}/{arch}/{variant}", None,
+                     f"ndcg10={ndcg:.4f};rel_size={rel:.1f}%")
+
+
+# ------------------------------------------------------------ Fig. 3
+
+def fig3_grid(fast: bool = True):
+    data = _make_data("gowalla", fast=True)
+    steps = 120 if fast else 400
+    ds = [32, 64] if fast else [16, 32, 64, 128]
+    ms = [2, 8] if fast else [1, 2, 4, 8, 16]
+    for d in ds:
+        for m in ms:
+            if m > d:
+                continue
+            model = _variant_model("sasrec", data, "jpq-svd", d_model=d,
+                                   m=m)
+            _, ndcg, _ = train_seqrec(model, data, steps=steps)
+            _row(f"fig3/d={d}/m={m}", None, f"ndcg10={ndcg:.4f}")
+
+
+# ------------------------------------------------------------ Fig. 4
+
+def fig4_tradeoff(fast: bool = True):
+    data = _make_data("gowalla", fast=True)
+    steps = 120 if fast else 400
+    for d in ([32, 64] if fast else [16, 32, 64, 128, 256]):
+        for variant in ("base", "jpq-svd"):
+            model = _variant_model("sasrec", data, variant, d_model=d)
+            _, ndcg, nbytes = train_seqrec(model, data, steps=steps)
+            _row(f"fig4/{variant}/d={d}", None,
+                 f"ndcg10={ndcg:.4f};bytes={nbytes}")
+
+
+# ----------------------------------------------- serving microbench
+
+def jpq_scoring(fast: bool = True):
+    """The paper's trick as a serving bandwidth win (CPU wall-clock is a
+    proxy; the structural win is the bytes column)."""
+    from repro.core import jpq as jpq_mod
+    from repro.core import full as full_mod
+    from repro.kernels.jpq_scores.ops import jpq_scores
+    from repro.nn.module import KeyGen
+
+    N, d, m, b, B = (100_000 if fast else 1_000_000), 256, 8, 256, 16
+    pf = full_mod.init(KeyGen(0), N, d)
+    pj = jpq_mod.init(KeyGen(1), N, d, m, b)
+    h = jax.random.normal(jax.random.PRNGKey(2), (B, d))
+
+    f_full = jax.jit(lambda hh: full_mod.logits(pf, hh))
+    f_jpq = jax.jit(lambda hh: jpq_mod.logits(pj, hh))
+    us_full = time_fn(f_full, h, iters=10)
+    us_jpq = time_fn(f_jpq, h, iters=10)
+    _row("jpq_scoring/full_table", f"{us_full:.0f}",
+         f"bytes_read={N * d * 4}")
+    _row("jpq_scoring/jpq_partial", f"{us_jpq:.0f}",
+         f"bytes_read={N * m + b * d * 4}")
+    if not fast:
+        f_kern = jax.jit(lambda hh: jpq_scores(
+            hh, pj["centroids"].value, pj["codes"].value))
+        us_k = time_fn(f_kern, h, iters=5)
+        _row("jpq_scoring/pallas_interpret", f"{us_k:.0f}",
+             "interpret-mode (TPU target)")
+
+    # embedding-bag hot path
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    V, dd, nb, L = 50_000, 64, 4096, 16
+    tab = jax.random.normal(jax.random.PRNGKey(3), (V, dd))
+    ids = jax.random.randint(jax.random.PRNGKey(4), (nb, L), 0, V)
+    w = jnp.ones((nb, L))
+    f_bag = jax.jit(lambda t, i, ww: embedding_bag_ref(t, i, ww))
+    _row("embedding_bag/gather_segsum", f"{time_fn(f_bag, tab, ids, w):.0f}",
+         f"nnz={nb * L}")
+
+
+# ----------------------------------------------------------- roofline
+
+def roofline():
+    """§Roofline table from the dry-run JSONs (run dryrun first)."""
+    root = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "dryrun")
+    for path in sorted(glob.glob(os.path.join(root, "*", "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        tag = f"roofline/{rec['mesh']}/{rec['arch']}/{rec['shape']}"
+        if "skipped" in rec:
+            _row(tag, None, "skipped")
+            continue
+        if "error" in rec:
+            _row(tag, None, f"ERROR:{rec['error'][:50]}")
+            continue
+        t = rec["roofline_terms_s"]
+        _row(tag, None,
+             f"compute={t['compute_s']:.2e};memory={t['memory_s']:.2e};"
+             f"collective={t['collective_s']:.2e};"
+             f"bottleneck={rec['bottleneck']}")
+
+
+BENCHES = {
+    "table2": table2_memory,
+    "table45": table45_strategies,
+    "fig3": fig3_grid,
+    "fig4": fig4_tradeoff,
+    "jpq_scoring": jpq_scoring,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"one of {sorted(BENCHES)}")
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale runs (slow; default is fast mode)")
+    args = ap.parse_args()
+    fast = not args.full
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(fast) if fn.__code__.co_argcount else fn()
+        except TypeError:
+            fn()
+
+
+if __name__ == "__main__":
+    main()

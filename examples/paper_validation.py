@@ -1,0 +1,63 @@
+"""Full paper-validation grid (Tables 4/5 analogue on synthetic data):
+
+  backbones   : SASRec, BERT4Rec, GRU4Rec
+  variants    : base, QR hashing, RecJPQ-{random, svd, bpr}
+  datasets    : "ml1m" (dense, no long tail), "gowalla" (75%+ long tail)
+
+Writes experiments/paper_validation.json; EXPERIMENTS.md §Paper-validation
+summarises it.  ~20-40 min on this CPU at default steps.
+
+    PYTHONPATH=src python examples/paper_validation.py --steps 400
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.run import _make_data, _variant_model  # noqa: E402
+from benchmarks.common import train_seqrec  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--archs", default="sasrec,bert4rec,gru4rec")
+    ap.add_argument("--datasets", default="ml1m,gowalla")
+    ap.add_argument("--out", default="experiments/paper_validation.json")
+    args = ap.parse_args()
+
+    results = []
+    for profile in args.datasets.split(","):
+        data = _make_data(profile, fast=False)
+        lt = data.long_tail_share()
+        for arch in args.archs.split(","):
+            base_bytes = None
+            for variant in ["base", "qr", "jpq-random", "jpq-svd",
+                            "jpq-bpr"]:
+                t0 = time.time()
+                model = _variant_model(arch, data, variant)
+                _, ndcg, nbytes = train_seqrec(model, data,
+                                               steps=args.steps)
+                if variant == "base":
+                    base_bytes = nbytes
+                rec = {"dataset": profile, "long_tail": round(lt, 3),
+                       "arch": arch, "variant": variant,
+                       "ndcg10": round(ndcg, 4),
+                       "param_bytes": nbytes,
+                       "rel_size_pct": round(100 * nbytes / base_bytes, 1),
+                       "train_s": round(time.time() - t0, 1)}
+                results.append(rec)
+                print(rec, flush=True)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Train MACE on batched synthetic molecules (energy regression) —
+demonstrates the GNN substrate (segment-sum message passing, exact
+Gaunt-intertwiner products) on the assigned 'molecule' cell's reduced
+config.
+
+    PYTHONPATH=src python examples/train_mace_molecule.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.data.graphs import molecule_batch  # noqa: E402
+from repro.models.mace import MACE, MACEConfig  # noqa: E402
+from repro.train.loop import TrainConfig, Trainer  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    G, N, E = 16, 12, 32
+    cfg = MACEConfig(n_layers=2, channels=32, lmax=2, correlation=3,
+                     n_rbf=8, d_feat=4, head="energy", n_graphs=G,
+                     r_cut=2.0, avg_neighbors=E / N)
+    model = MACE(cfg)
+
+    def data_fn(step):
+        return molecule_batch(step, batch=G, n_nodes=N, n_edges=E,
+                              d_feat=4)
+
+    tr = Trainer(model, OptConfig(lr=2e-3),
+                 TrainConfig(steps=args.steps, batch_size=G,
+                             log_every=max(args.steps // 10, 1),
+                             eval_every=0),
+                 data_fn=data_fn)
+    params, hist = tr.run()
+    losses = [h["loss"] for h in hist if "loss" in h]
+    print(f"energy MSE: {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    # rotation-invariance check on the trained model
+    import numpy as np
+    batch = {k: jnp.asarray(v) for k, v in data_fn(0).items()}
+    e1 = model.serve(params, batch)
+    Q, _ = np.linalg.qr(np.random.default_rng(0).standard_normal((3, 3)))
+    batch2 = dict(batch)
+    batch2["positions"] = batch["positions"] @ jnp.asarray(
+        Q.T, jnp.float32)
+    e2 = model.serve(params, batch2)
+    print(f"rotation invariance: max rel err "
+          f"{float(jnp.max(jnp.abs(e1 - e2) / (jnp.abs(e1) + 1e-6))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

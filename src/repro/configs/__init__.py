@@ -1,0 +1,6 @@
+"""Arch registry: one module per assigned architecture (+ paper backbones).
+
+``get_bundle(name)`` returns an ArchBundle with the full-size model
+factory, the per-shape dry-run cells, and a reduced smoke config.
+"""
+from repro.configs.registry import ARCHS, get_bundle, list_archs  # noqa: F401

@@ -1,0 +1,99 @@
+"""Bundle/Cell abstractions binding (arch × input-shape) to lowerable
+programs for the multi-pod dry-run and the smoke tests.
+
+A Cell declares:
+  * ``kind``    : train | serve | decode   (what extra state it needs)
+  * ``specs``   : input name -> Spec(shape, dtype, logical axes)
+  * ``build``   : model -> step callable
+      train : fn(values, opt_state, batch)  -> (values, opt_state, loss)
+      serve : fn(values, batch)             -> outputs
+      decode: fn(values, caches, batch)     -> (logits, caches)
+  * ``skip``    : reason string if the cell is documented-skip
+                  (e.g. long_500k on pure full-attention archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    dtype: Any
+    axes: tuple          # logical axis names, len == ndim
+
+    def sds(self):
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    shape_name: str
+    kind: str                            # train | serve | decode
+    specs: Dict[str, Spec]
+    build: Callable[[Any], Callable]
+    state_fn: Optional[Callable] = None  # decode: model -> (sds, axes) caches
+    skip: Optional[str] = None
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str                          # lm | gnn | recsys
+    make_model: Callable[[], Any]
+    cells: Dict[str, Cell]
+    make_smoke: Callable[[], tuple]      # () -> (model, batch dict, rng)
+    description: str = ""
+
+    def cell(self, shape_name: str) -> Cell:
+        return self.cells[shape_name]
+
+
+# ------------------------------------------------- generic cell builders
+
+def train_step_builder(model):
+    """Canonical full train step (fwd + bwd + AdamW update)."""
+    from repro.nn import module as nn
+    from repro.train.optimizer import OptConfig, apply_updates
+
+    opt_cfg = OptConfig(kind="adamw", lr=1e-4, weight_decay=0.01)
+    params_meta = None
+
+    def fn(values, opt_state, batch):
+        nonlocal params_meta
+        meta = model._params_meta            # set by dryrun/eval_shape
+        def loss_fn(v):
+            params = nn.with_values(meta, v)
+            loss, _ = model.train_loss(params, batch)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(values)
+        new_values, new_state, _ = apply_updates(
+            opt_cfg, opt_state, values, grads)
+        return new_values, new_state, loss
+
+    return fn
+
+
+def serve_builder(method: str):
+    def builder(model):
+        from repro.nn import module as nn
+
+        def fn(values, batch):
+            params = nn.with_values(model._params_meta, values)
+            return getattr(model, method)(params, batch)
+        return fn
+    return builder
+
+
+def decode_builder(model):
+    from repro.nn import module as nn
+
+    def fn(values, caches, batch):
+        params = nn.with_values(model._params_meta, values)
+        return model.decode_step(params, batch["token"], caches)
+    return fn

@@ -1,0 +1,95 @@
+"""Shared cell construction for the 5 assigned LM architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchBundle, Cell, Spec, decode_builder,
+                                serve_builder, train_step_builder)
+from repro.models.lm import LMConfig, TransformerLM
+from repro.nn.moe import MoEConfig
+
+# the four LM shapes (assignment spec)
+TRAIN_4K = ("train_4k", 4096, 256)
+PREFILL_32K = ("prefill_32k", 32768, 32)
+DECODE_32K = ("decode_32k", 32768, 128)
+LONG_500K = ("long_500k", 524288, 1)
+
+
+def _cache_axes(sds_tree):
+    return jax.tree.map(
+        lambda l: ("layers",) if l.ndim == 1 else
+        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), sds_tree)
+
+
+def lm_cells(cfg: LMConfig):
+    cells = {}
+    name, S, B = TRAIN_4K
+    cells[name] = Cell(
+        shape_name=name, kind="train",
+        specs={"tokens": Spec((B, S), jnp.int32, ("batch", "seq")),
+               "targets": Spec((B, S), jnp.int32, ("batch", "seq"))},
+        build=train_step_builder)
+
+    name, S, B = PREFILL_32K
+    cells[name] = Cell(
+        shape_name=name, kind="serve",
+        specs={"tokens": Spec((B, S), jnp.int32, ("batch", "seq"))},
+        build=lambda model: (
+            lambda values, batch: _prefill(model, values, batch)))
+
+    for name, S, B in (DECODE_32K, LONG_500K):
+        skip = None
+        if name == "long_500k" and cfg.window is None:
+            skip = ("pure full-attention arch: 500k-context decode is "
+                    "excluded per assignment (needs sub-quadratic "
+                    "attention); see DESIGN.md §Arch-applicability")
+        cells[name] = Cell(
+            shape_name=name, kind="decode",
+            specs={"token": Spec((B, 1), jnp.int32, ("batch", "seq"))},
+            build=decode_builder,
+            state_fn=_decode_state(B, S),
+            skip=skip,
+            note=(f"KV ring buffer = min({S}, window={cfg.window})"
+                  if cfg.window else ""))
+    return cells
+
+
+def _prefill(model, values, batch):
+    from repro.nn import module as nn
+    params = nn.with_values(model._params_meta, values)
+    return model.prefill(params, batch["tokens"])
+
+
+def _decode_state(batch: int, max_len: int):
+    def state_fn(model):
+        sds = jax.eval_shape(
+            lambda: model.init_caches(batch, max_len, jnp.bfloat16))
+        axes = _cache_axes(sds)
+        return sds, axes
+    return state_fn
+
+
+def make_lm_bundle(name: str, cfg: LMConfig, smoke_cfg: LMConfig,
+                   description: str = "") -> ArchBundle:
+    def make_model(shape=None):
+        return TransformerLM(cfg)
+
+    def make_smoke():
+        model = TransformerLM(smoke_cfg)
+        rng = jax.random.PRNGKey(0)
+        B, S = 2, 16
+        import numpy as np
+        r = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(r.integers(0, smoke_cfg.vocab, (B, S))),
+            "targets": jnp.asarray(r.integers(0, smoke_cfg.vocab, (B, S))),
+        }
+        return model, batch, rng
+
+    return ArchBundle(name=name, family="lm", make_model=make_model,
+                      cells=lm_cells(cfg), make_smoke=make_smoke,
+                      description=description)

@@ -1,0 +1,83 @@
+"""mace [arXiv:2206.07697]: 2L C=128 l_max=2 correlation=3 n_rbf=8.
+
+Four graph shapes; each needs its own head/feature width, so
+``make_model(shape)`` is shape-aware.  Node/edge counts are padded to
+multiples of 512 so the "nodes"/"edges" logical axes shard on the
+production meshes (masks carry validity).  RecJPQ is inapplicable here
+(no id-embedding table) — DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchBundle, Cell, Spec, train_step_builder
+from repro.models.mace import MACE, MACEConfig
+
+
+def _pad512(x: int) -> int:
+    return (x + 511) // 512 * 512
+
+
+# shape -> (n_nodes, n_edges, d_feat, head, n_classes, n_graphs)
+SHAPES = {
+    "full_graph_sm": (_pad512(2708), _pad512(10556), 1433,
+                      "node_class", 7, 1),
+    "minibatch_lg": (_pad512(1024 * (1 + 15 + 150)),
+                     _pad512(1024 * 15 + 1024 * 150), 602,
+                     "node_class", 41, 1),
+    "ogb_products": (_pad512(2_449_029), _pad512(61_859_140), 100,
+                     "node_class", 47, 1),
+    "molecule": (_pad512(128 * 30), _pad512(128 * 64), 16,
+                 "energy", 0, 128),
+}
+
+
+def model_cfg(shape: str) -> MACEConfig:
+    n, e, f, head, ncls, ng = SHAPES[shape]
+    return MACEConfig(n_layers=2, channels=128, lmax=2, correlation=3,
+                      n_rbf=8, d_feat=f, head=head, n_classes=ncls,
+                      n_graphs=ng, avg_neighbors=max(e / max(n, 1), 1.0))
+
+
+def _graph_specs(shape: str):
+    n, e, f, head, ncls, ng = SHAPES[shape]
+    specs = {
+        "positions": Spec((n, 3), jnp.float32, ("nodes", None)),
+        "features": Spec((n, f), jnp.float32, ("nodes", "features")),
+        "senders": Spec((e,), jnp.int32, ("edges",)),
+        "receivers": Spec((e,), jnp.int32, ("edges",)),
+        "edge_mask": Spec((e,), jnp.float32, ("edges",)),
+        "node_mask": Spec((n,), jnp.float32, ("nodes",)),
+        "graph_id": Spec((n,), jnp.int32, ("nodes",)),
+    }
+    if head == "energy":
+        specs["labels"] = Spec((ng,), jnp.float32, (None,))
+    else:
+        specs["labels"] = Spec((n,), jnp.int32, ("nodes",))
+    return specs
+
+
+def bundle() -> ArchBundle:
+    cells = {}
+    for shape in SHAPES:
+        cells[shape] = Cell(shape_name=shape, kind="train",
+                            specs=_graph_specs(shape),
+                            build=train_step_builder)
+
+    def make_model(shape=None):
+        return MACE(model_cfg(shape or "molecule"))
+
+    def make_smoke():
+        from repro.data.graphs import molecule_batch
+        cfg = MACEConfig(n_layers=2, channels=8, lmax=2, correlation=3,
+                         n_rbf=4, d_feat=4, head="energy", n_graphs=4,
+                         r_cut=2.0, avg_neighbors=2.0)
+        model = MACE(cfg)
+        batch = molecule_batch(0, batch=4, n_nodes=8, n_edges=12, d_feat=4)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return model, batch, jax.random.PRNGKey(0)
+
+    return ArchBundle(name="mace", family="gnn", make_model=make_model,
+                      cells=cells, make_smoke=make_smoke,
+                      description="E(3)-equivariant higher-order MPNN")

@@ -1,0 +1,253 @@
+"""The four recsys architectures × their four shapes.
+
+This is the paper's native regime: every id table is a
+``repro.core.EmbeddingConfig`` and the dry-run lowers each arch both as
+``<arch>`` (full tables, the paper's Base) and as ``<arch>-jpq``
+(RecJPQ tables, m=8, b=256 per the paper's default) — giving the
+baseline-vs-technique comparison at production scale.
+
+Shapes: train_batch (B=65,536 training step), serve_p99 (B=512 online),
+serve_bulk (B=262,144 offline scoring), retrieval_cand (1 context vs
+1,000,000 candidates).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ArchBundle, Cell, Spec, serve_builder,
+                                train_step_builder)
+from repro.core import EmbeddingConfig
+from repro.models.recsys import (DIEN, DIENConfig, DLRM, DLRMConfig, FM,
+                                 FMConfig, TwoTower, TwoTowerConfig)
+
+N_CANDIDATES = 1_000_000
+JPQ = EmbeddingConfig(0, 0, kind="jpq", m=8, b=256)
+FULLE = EmbeddingConfig(0, 0, kind="full")
+
+
+def _ser(method):
+    return serve_builder(method)
+
+
+# ------------------------------------------------------------ two-tower
+
+def two_tower_bundle(kind: str = "full") -> ArchBundle:
+    emb = JPQ if kind == "jpq" else FULLE
+    cfg = TwoTowerConfig(n_items=N_CANDIDATES, embed_dim=256,
+                         tower_mlp=(1024, 512, 256), hist_len=50,
+                         embedding=emb,
+                         # §Perf iteration 2: shard-local in-batch
+                         # negatives (no [B, B] score matrix)
+                         negatives="local")
+
+    def hist_spec(B):
+        return Spec((B, cfg.hist_len), jnp.int32, ("batch", "seq"))
+
+    cells = {
+        "train_batch": Cell(
+            "train_batch", "train",
+            {"user_hist": hist_spec(65536),
+             "pos_item": Spec((65536,), jnp.int32, ("batch",)),
+             "logq": Spec((65536,), jnp.float32, ("batch",))},
+            train_step_builder),
+        "serve_p99": Cell(
+            "serve_p99", "serve", {"user_hist": hist_spec(512)},
+            _ser("retrieve")),
+        "serve_bulk": Cell(
+            "serve_bulk", "serve", {"user_hist": hist_spec(262144)},
+            _ser("bulk_retrieve")),
+        "retrieval_cand": Cell(
+            "retrieval_cand", "serve", {"user_hist": hist_spec(1)},
+            _ser("retrieve"),
+            note="1 query vs 1M candidates through emb.logits "
+                 "(JPQ partial-score path when kind=jpq)"),
+    }
+
+    def make_model(shape=None):
+        return TwoTower(cfg)
+
+    def make_smoke():
+        scfg = TwoTowerConfig(n_items=200, embed_dim=32,
+                              tower_mlp=(64, 32), hist_len=8,
+                              embedding=dataclasses.replace(emb, m=4, b=16))
+        r = np.random.default_rng(0)
+        batch = {"user_hist": jnp.asarray(r.integers(0, 201, (4, 8))),
+                 "pos_item": jnp.asarray(r.integers(1, 201, (4,))),
+                 "logq": jnp.zeros(4, jnp.float32)}
+        return TwoTower(scfg), batch, jax.random.PRNGKey(0)
+
+    suffix = "-jpq" if kind == "jpq" else ""
+    return ArchBundle(f"two-tower-retrieval{suffix}", "recsys", make_model,
+                      cells, make_smoke,
+                      "sampled-softmax retrieval, item table "
+                      f"[{kind}]")
+
+
+# ------------------------------------------------------------------- FM
+
+FM_VOCABS = [N_CANDIDATES] + [100_000] * 19 + [10_000] * 19
+
+
+def fm_bundle(kind: str = "full") -> ArchBundle:
+    emb = JPQ if kind == "jpq" else FULLE
+    # embed_dim 10 isn't divisible by m=8 -> m=5 for the JPQ variant
+    emb = dataclasses.replace(emb, m=5) if kind == "jpq" else emb
+    cfg = FMConfig(n_fields=39, vocab_sizes=FM_VOCABS, embed_dim=10,
+                   embedding=emb)
+
+    def batch_specs(B):
+        return {"sparse": Spec((B, 39), jnp.int32, ("batch", None)),
+                "label": Spec((B,), jnp.int32, ("batch",))}
+
+    cells = {
+        "train_batch": Cell("train_batch", "train", batch_specs(65536),
+                            train_step_builder),
+        "serve_p99": Cell("serve_p99", "serve",
+                          {"sparse": Spec((512, 39), jnp.int32,
+                                          ("batch", None))},
+                          _ser("serve")),
+        "serve_bulk": Cell("serve_bulk", "serve",
+                           {"sparse": Spec((262144, 39), jnp.int32,
+                                           ("batch", None))},
+                           _ser("serve")),
+        "retrieval_cand": Cell(
+            "retrieval_cand", "serve",
+            {"sparse_rest": Spec((1, 38), jnp.int32, ("batch", None))},
+            _ser("candidate_scores"),
+            note="factorised full-catalogue scoring via emb.logits"),
+    }
+
+    def make_model(shape=None):
+        return FM(cfg)
+
+    def make_smoke():
+        scfg = FMConfig(n_fields=6, vocab_sizes=[64] * 6, embed_dim=8,
+                        embedding=dataclasses.replace(emb, m=4, b=16)
+                        if kind == "jpq" else None)
+        r = np.random.default_rng(0)
+        batch = {"sparse": jnp.asarray(r.integers(0, 64, (8, 6))),
+                 "label": jnp.asarray(r.integers(0, 2, (8,)))}
+        return FM(scfg), batch, jax.random.PRNGKey(0)
+
+    suffix = "-jpq" if kind == "jpq" else ""
+    return ArchBundle(f"fm{suffix}", "recsys", make_model, cells,
+                      make_smoke, f"factorisation machine [{kind}]")
+
+
+# ----------------------------------------------------------------- DLRM
+
+DLRM_VOCABS = [N_CANDIDATES if i == 0 else
+               [40_000_000, 4_000_000, 400_000, 40_000, 4_000][i % 5]
+               for i in range(26)]
+
+
+def dlrm_bundle(kind: str = "full") -> ArchBundle:
+    emb = JPQ if kind == "jpq" else FULLE
+    cfg = DLRMConfig(n_dense=13, n_sparse=26, embed_dim=64,
+                     bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1),
+                     vocab_sizes=DLRM_VOCABS, embedding=emb)
+
+    def batch_specs(B):
+        return {"dense": Spec((B, 13), jnp.float32, ("batch", None)),
+                "sparse": Spec((B, 26), jnp.int32, ("batch", None)),
+                "label": Spec((B,), jnp.int32, ("batch",))}
+
+    cells = {
+        "train_batch": Cell("train_batch", "train", batch_specs(65536),
+                            train_step_builder),
+        "serve_p99": Cell("serve_p99", "serve",
+                          {k: v for k, v in batch_specs(512).items()
+                           if k != "label"}, _ser("serve")),
+        "serve_bulk": Cell("serve_bulk", "serve",
+                           {k: v for k, v in batch_specs(262144).items()
+                            if k != "label"}, _ser("serve")),
+        "retrieval_cand": Cell(
+            "retrieval_cand", "serve",
+            {"dense": Spec((1, 13), jnp.float32, ("batch", None)),
+             "sparse_rest": Spec((1, 25), jnp.int32, ("batch", None)),
+             "candidates": Spec((N_CANDIDATES,), jnp.int32, ("items",))},
+            _ser("score_candidates"),
+            note="chunked lax.map over 1M candidates (non-factorisable "
+                 "top-MLP)"),
+    }
+
+    def make_model(shape=None):
+        return DLRM(cfg)
+
+    def make_smoke():
+        scfg = DLRMConfig(n_dense=5, n_sparse=4, embed_dim=16,
+                          bot_mlp=(32, 16), top_mlp=(32, 1),
+                          vocab_sizes=[128, 64, 64, 32],
+                          embedding=dataclasses.replace(emb, m=4, b=16)
+                          if kind == "jpq" else None)
+        r = np.random.default_rng(0)
+        batch = {"dense": jnp.asarray(
+                     r.standard_normal((8, 5)).astype(np.float32)),
+                 "sparse": jnp.asarray(r.integers(0, 32, (8, 4))),
+                 "label": jnp.asarray(r.integers(0, 2, (8,)))}
+        return DLRM(scfg), batch, jax.random.PRNGKey(0)
+
+    suffix = "-jpq" if kind == "jpq" else ""
+    return ArchBundle(f"dlrm-rm2{suffix}", "recsys", make_model, cells,
+                      make_smoke, f"DLRM dot-interaction CTR [{kind}]")
+
+
+# ----------------------------------------------------------------- DIEN
+
+def dien_bundle(kind: str = "full") -> ArchBundle:
+    emb = JPQ if kind == "jpq" else FULLE
+    # embed_dim 18: m must divide -> m=6 for the JPQ variant
+    emb = dataclasses.replace(emb, m=6) if kind == "jpq" else emb
+    cfg = DIENConfig(n_items=N_CANDIDATES, embed_dim=18, seq_len=100,
+                     gru_dim=108, mlp=(200, 80), embedding=emb)
+    S = cfg.seq_len
+
+    def batch_specs(B, with_neg=True):
+        d = {"hist": Spec((B, S), jnp.int32, ("batch", "seq")),
+             "target": Spec((B,), jnp.int32, ("batch",)),
+             "label": Spec((B,), jnp.int32, ("batch",))}
+        if with_neg:
+            d["hist_neg"] = Spec((B, S), jnp.int32, ("batch", "seq"))
+        return d
+
+    cells = {
+        "train_batch": Cell("train_batch", "train", batch_specs(65536),
+                            train_step_builder),
+        "serve_p99": Cell("serve_p99", "serve",
+                          {k: v for k, v in
+                           batch_specs(512, False).items()
+                           if k != "label"}, _ser("serve")),
+        "serve_bulk": Cell("serve_bulk", "serve",
+                           {k: v for k, v in
+                            batch_specs(262144, False).items()
+                            if k != "label"}, _ser("serve")),
+        "retrieval_cand": Cell(
+            "retrieval_cand", "serve",
+            {"hist": Spec((1, S), jnp.int32, ("batch", "seq")),
+             "candidates": Spec((N_CANDIDATES,), jnp.int32, ("items",))},
+            _ser("score_candidates"),
+            note="interest GRU once, AUGRU per candidate chunk"),
+    }
+
+    def make_model(shape=None):
+        return DIEN(cfg)
+
+    def make_smoke():
+        scfg = DIENConfig(n_items=100, embed_dim=8, seq_len=10,
+                          gru_dim=12, mlp=(16, 8),
+                          embedding=dataclasses.replace(emb, m=4, b=16)
+                          if kind == "jpq" else None)
+        r = np.random.default_rng(0)
+        batch = {"hist": jnp.asarray(r.integers(0, 101, (4, 10))),
+                 "hist_neg": jnp.asarray(r.integers(1, 101, (4, 10))),
+                 "target": jnp.asarray(r.integers(1, 101, (4,))),
+                 "label": jnp.asarray(r.integers(0, 2, (4,)))}
+        return DIEN(scfg), batch, jax.random.PRNGKey(0)
+
+    suffix = "-jpq" if kind == "jpq" else ""
+    return ArchBundle(f"dien{suffix}", "recsys", make_model, cells,
+                      make_smoke, f"interest-evolution CTR [{kind}]")

@@ -1,0 +1,59 @@
+"""--arch registry: the 10 assigned architectures (+ paper backbones and
+the RecJPQ variants of the recsys archs)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_LOADERS: Dict[str, Callable] = {}
+
+
+def _register(name: str, loader: Callable):
+    _LOADERS[name] = loader
+
+
+def _lm(module: str):
+    def load():
+        import importlib
+        return importlib.import_module(f"repro.configs.{module}").bundle()
+    return load
+
+
+_register("mixtral-8x7b", _lm("mixtral_8x7b"))
+_register("olmoe-1b-7b", _lm("olmoe_1b_7b"))
+_register("stablelm-12b", _lm("stablelm_12b"))
+_register("qwen3-14b", _lm("qwen3_14b"))
+_register("stablelm-1.6b", _lm("stablelm_1_6b"))
+_register("mace", _lm("mace_arch"))
+
+
+def _recsys(fn_name: str, kind: str):
+    def load():
+        from repro.configs import recsys_archs as ra
+        return getattr(ra, fn_name)(kind)
+    return load
+
+
+for base, fn in [("two-tower-retrieval", "two_tower_bundle"),
+                 ("fm", "fm_bundle"), ("dlrm-rm2", "dlrm_bundle"),
+                 ("dien", "dien_bundle")]:
+    _register(base, _recsys(fn, "full"))
+    _register(base + "-jpq", _recsys(fn, "jpq"))
+
+# the 10 assigned archs (the 40-cell dry-run grid)
+ARCHS = ["mixtral-8x7b", "olmoe-1b-7b", "stablelm-12b", "qwen3-14b",
+         "stablelm-1.6b", "mace", "two-tower-retrieval", "fm",
+         "dlrm-rm2", "dien"]
+
+# beyond-baseline variants (paper technique at production scale)
+JPQ_VARIANTS = ["two-tower-retrieval-jpq", "fm-jpq", "dlrm-rm2-jpq",
+                "dien-jpq"]
+
+
+def list_archs():
+    return sorted(_LOADERS)
+
+
+def get_bundle(name: str):
+    if name not in _LOADERS:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return _LOADERS[name]()

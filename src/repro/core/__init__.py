@@ -1,0 +1,9 @@
+"""repro.core — the paper's contribution: RecJPQ compressed item embeddings.
+
+Public surface:
+  EmbeddingConfig / make_embedding  - factory over {full, jpq, qr}
+  build_codebook                    - centroid assignment strategies
+  jpq / full / qr submodules        - the three embedding implementations
+"""
+from repro.core.api import EmbeddingConfig, Embedding, make_embedding  # noqa: F401
+from repro.core.assign import build_codebook  # noqa: F401

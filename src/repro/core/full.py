@@ -1,0 +1,22 @@
+"""Baseline uncompressed item-embedding table (the paper's "Base")."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+
+
+def init(kg: KeyGen, n_items: int, d: int, *, dtype=jnp.float32,
+         init_scale: float | None = None):
+    scale = init_scale if init_scale is not None else d ** -0.5
+    tab = scale * nn.jax.random.normal(kg(), (n_items, d))
+    return {"table": P(tab.astype(dtype), ("table", "table_dim"))}
+
+
+def lookup(p, ids):
+    return jnp.take(p["table"].value, ids, axis=0)
+
+
+def logits(p, h):
+    return h.astype(jnp.float32) @ p["table"].value.T.astype(jnp.float32)

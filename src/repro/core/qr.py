@@ -1,0 +1,55 @@
+"""Quotient-Remainder compositional embedding (Shi et al., KDD'20).
+
+The paper's compression baseline: item i is encoded by two hashes,
+quotient ``i // q`` and remainder ``i % q`` with ``q = ceil(sqrt(N))``;
+its embedding is the element-wise product of the two sub-embeddings
+(the QR paper's multiplicative composition).  Every item has a unique
+(quotient, remainder) pair, but neighbouring codes are unrelated to item
+similarity — Limitation L5 in the paper.
+
+Full-catalogue scoring avoids materialising [N, d]:
+  scores[a*q + r] = sum_d h_d Q[a,d] R[r,d]  =  einsum('d,ad,rd->ar').
+
+``n_items`` is static config, passed explicitly (never a traced value).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import P, KeyGen
+
+
+def qr_base(n_items: int) -> int:
+    return math.isqrt(max(n_items - 1, 0)) + 1 if n_items > 1 else 1
+
+
+def init(kg: KeyGen, n_items: int, d: int, *, dtype=jnp.float32,
+         init_scale: float | None = None):
+    q = qr_base(n_items)
+    n_quot = (n_items + q - 1) // q
+    scale = init_scale if init_scale is not None else d ** -0.25
+    qt = scale * jax.random.normal(kg(), (n_quot, d))
+    rt = scale * jax.random.normal(kg(), (q, d))
+    return {
+        "q_table": P(qt.astype(dtype), ("table", "table_dim")),
+        "r_table": P(rt.astype(dtype), ("table", "table_dim")),
+    }
+
+
+def lookup(p, ids, n_items: int):
+    q = qr_base(n_items)
+    return (jnp.take(p["q_table"].value, ids // q, axis=0)
+            * jnp.take(p["r_table"].value, ids % q, axis=0))
+
+
+def logits(p, h, n_items: int):
+    """h [..., d] -> [..., n_items] without materialising the table."""
+    h32 = h.astype(jnp.float32)
+    qt = p["q_table"].value.astype(jnp.float32)     # [A, d]
+    rt = p["r_table"].value.astype(jnp.float32)     # [q, d]
+    s = jnp.einsum("...d,ad,rd->...ar", h32, qt, rt)
+    s = s.reshape(*h.shape[:-1], qt.shape[0] * rt.shape[0])
+    return s[..., :n_items]

@@ -1,0 +1,82 @@
+"""Explicitly-sharded embedding ops (shard_map) for the cases where
+GSPMD's default gather partitioning moves activations instead of
+staying row-local.
+
+``pooled_lookup``: EmbeddingBag over a row-sharded table.  Each model
+shard gathers its own rows (out-of-range ids hit a masked clip) and
+pools locally, so the only cross-device traffic is the pooled
+``[B, d]`` psum — not the ``[B, H, d]`` pre-pool tensor GSPMD would
+all-gather.  §Perf two-tower iteration 1: 17.6 GB -> ~0.07 GB of
+collective payload per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec
+
+from repro.dist import rules as _rules
+
+
+def pooled_lookup(table, ids, weights):
+    """table [V, d] (rows shardable over 'model'), ids [B, H] int,
+    weights [B, H] float -> pooled [B, d] = sum_h w * table[ids]."""
+    mesh = _rules._CTX.mesh
+    V, d = table.shape
+    if (mesh is None or "model" not in mesh.shape
+            or V % mesh.shape["model"] != 0):
+        e = jnp.take(table, ids, axis=0)
+        return jnp.sum(e * weights[..., None].astype(e.dtype), axis=1)
+
+    shards = mesh.shape["model"]
+    rows = V // shards
+    spec_ids = _rules.resolve_axes(("batch", None), ids.shape, mesh)
+    spec_out = _rules.resolve_axes(("batch", None), (ids.shape[0], d),
+                                   mesh)
+
+    def body(tab, ids_l, w_l):
+        pid = jax.lax.axis_index("model")
+        loc = ids_l - pid * rows
+        ok = (loc >= 0) & (loc < rows)
+        e = jnp.take(tab, jnp.clip(loc, 0, rows - 1), axis=0)  # [b, H, d]
+        w = w_l * ok.astype(w_l.dtype)
+        pooled = jnp.sum(e * w[..., None].astype(e.dtype), axis=1)
+        return jax.lax.psum(pooled, "model")
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(PartitionSpec("model", None), spec_ids, spec_ids),
+        out_specs=spec_out, check_vma=False)
+    return f(table, ids, weights.astype(table.dtype))
+
+
+def topk_over_items(scores, k: int):
+    """Hierarchical top-k over an item-sharded score matrix.
+
+    scores [B, N] (N shardable over 'model') -> (values, ids) [B, k].
+    Local top-k per shard, all-gather only [B, shards*k] candidates,
+    final top-k — instead of GSPMD gathering the full [B, N] matrix.
+    §Perf retrieval iteration.
+    """
+    mesh = _rules._CTX.mesh
+    B, N = scores.shape
+    if mesh is None or "model" not in mesh.shape \
+            or N % mesh.shape["model"] != 0:
+        return jax.lax.top_k(scores, k)
+    local_n = N // mesh.shape["model"]
+    spec_b = _rules.resolve_axes(("batch", None), (B, N), mesh)
+    out_spec = _rules.resolve_axes(("batch", None), (B, k), mesh)
+
+    def body(s):                                   # [b, N/shards]
+        v, i = jax.lax.top_k(s, k)
+        i = i + jax.lax.axis_index("model") * local_n
+        v_all = jax.lax.all_gather(v, "model", axis=1, tiled=True)
+        i_all = jax.lax.all_gather(i, "model", axis=1, tiled=True)
+        vv, pos = jax.lax.top_k(v_all, k)
+        return vv, jnp.take_along_axis(i_all, pos, axis=1)
+
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(PartitionSpec(spec_b[0], "model"),),
+                  out_specs=(out_spec, out_spec), check_vma=False)
+    return f(scores)

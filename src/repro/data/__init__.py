@@ -1,0 +1,4 @@
+"""Synthetic, stateless-seeded data pipelines (no public datasets in the
+offline container; distributions mimic the paper's: Zipf item popularity
+with a controllable long-tail share, latent-cluster sequence structure
+so sequence models and SVD/BPR assignment have signal to find)."""

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  jpq_scores    - RecJPQ full-catalogue scoring through int8/int32 codes
+                  (the paper's inference/training hot path).
+  embedding_bag - fused gather + segment-reduce for recsys sparse tables.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper with shape padding + interpret fallback on CPU) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

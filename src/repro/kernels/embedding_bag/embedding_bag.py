@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + weighted segment-sum).
+
+JAX has no native EmbeddingBag; the framework's jnp path is
+``take + segment_sum``.  This kernel is the fused TPU version for the
+fixed-fanout layout recsys uses: ``ids [n_bags, L]`` (padded with a
+sentinel slot whose weight is 0) and per-slot ``weights [n_bags, L]``.
+
+TPU adaptation: the gather is expressed through *scalar-prefetched*
+block indexing — ids are a scalar-prefetch operand, the grid is
+``(n_bags, L)`` and the table's BlockSpec index_map picks row
+``ids[bag, slot]`` for each step, so the MXU/VPU never sees an indexed
+load; the DMA engine streams exactly the rows needed.  The output block
+for a bag is revisited across the L minor steps and accumulated in
+place (zeroed at slot 0) — the canonical Pallas reduction layout.
+A production TBE kernel would widen this to multi-row DMA per step; one
+row per step keeps the reference kernel simple while exercising the
+same memory plan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, w_ref, o_ref):
+    # table_ref: [1, d] (row ids[bag, slot]); w_ref: [1, L]; o_ref: [1, d]
+    slot = pl.program_id(1)
+    row = table_ref[0, :].astype(jnp.float32)
+    w = w_ref[0, slot].astype(jnp.float32)
+
+    @pl.when(slot == 0)
+    def _init():
+        o_ref[0, :] = row * w
+
+    @pl.when(slot != 0)
+    def _acc():
+        o_ref[0, :] += row * w
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_fixed(table, ids, weights, *, interpret: bool = False):
+    """table [V, d], ids [n_bags, L] int32, weights [n_bags, L]
+    -> [n_bags, d] fp32."""
+    V, d = table.shape
+    n_bags, L = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bags, L),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, ids: (ids[i, j], 0)),
+            pl.BlockSpec((1, L), lambda i, j, ids: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
+        interpret=interpret,
+        name="embedding_bag",
+    )(ids.astype(jnp.int32), table, weights)

@@ -1,0 +1,27 @@
+"""jit'd public wrapper for embedding_bag with CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_fixed
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, weights=None, *, combiner: str = "sum",
+                  interpret: bool | None = None, use_kernel: bool = True):
+    """Fixed-fanout EmbeddingBag.
+
+    table [V, d]; ids [n_bags, L] (pad slots -> any row, weight 0);
+    weights [n_bags, L] or None (ones). Returns [n_bags, d] fp32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    if combiner == "mean":
+        denom = jnp.maximum(jnp.sum(weights, 1, keepdims=True), 1e-9)
+        weights = weights / denom
+    if not use_kernel:
+        return embedding_bag_ref(table, ids, weights)
+    return embedding_bag_fixed(table, ids, weights, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for embedding_bag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights):
+    """table [V, d], ids [n_bags, L], weights [n_bags, L] -> [n_bags, d]."""
+    rows = jnp.take(table, ids, axis=0).astype(jnp.float32)   # [B, L, d]
+    return jnp.sum(rows * weights[..., None].astype(jnp.float32), axis=1)

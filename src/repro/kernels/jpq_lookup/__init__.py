@@ -1,0 +1,1 @@
+from repro.kernels.jpq_lookup.ops import jpq_lookup  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for jpq_lookup with padding + CPU interpret."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jpq_lookup.jpq_lookup import jpq_lookup_tiles
+
+
+def jpq_lookup(ids, codes, centroids, *, block_b: int = 8,
+               interpret: bool | None = None):
+    """ids int[...], codes [N, m], centroids [m, b, dk] -> [..., m*dk]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = ids.shape
+    flat = ids.reshape(-1).astype(jnp.int32)
+    B = flat.shape[0]
+    Bp = (B + block_b - 1) // block_b * block_b
+    flat = jnp.pad(flat, (0, Bp - B))
+    out = jpq_lookup_tiles(flat, codes, centroids, block_b=block_b,
+                           interpret=interpret)
+    return out[:B].reshape(*lead, -1)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for jpq_lookup (same math as repro.core.jpq.lookup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jpq_lookup_ref(ids, codes, centroids):
+    """ids [B], codes [N, m], centroids [m, b, dk] -> [B, m*dk] fp32."""
+    m = centroids.shape[0]
+    rows = jnp.take(codes, ids, axis=0).astype(jnp.int32)   # [B, m]
+    emb = centroids.astype(jnp.float32)[jnp.arange(m), rows]  # [B, m, dk]
+    return emb.reshape(ids.shape[0], -1)

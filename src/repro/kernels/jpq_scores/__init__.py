@@ -1,0 +1,1 @@
+from repro.kernels.jpq_scores.ops import jpq_scores  # noqa: F401

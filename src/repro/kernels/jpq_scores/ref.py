@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for jpq_scores."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jpq_scores_ref(h, centroids, codes):
+    """h [..., d], centroids [m, b, dk], codes [N, m] -> [..., N] fp32."""
+    m, b, dk = centroids.shape
+    codes = codes.astype(jnp.int32)
+    hs = h.reshape(*h.shape[:-1], m, dk).astype(jnp.float32)
+    part = jnp.einsum("...mk,mbk->...mb", hs,
+                      centroids.astype(jnp.float32))
+    s = part[..., 0, :][..., codes[:, 0]]
+    for j in range(1, m):
+        s = s + part[..., j, :][..., codes[:, j]]
+    return s
+
+
+def jpq_scores_lut_ref(partial, codes):
+    """partial [B, m, b] fp32, codes [N, m] -> [B, N] fp32."""
+    m = codes.shape[1]
+    s = partial[:, 0, :][:, codes[:, 0]]
+    for j in range(1, m):
+        s = s + partial[:, j, :][:, codes[:, j]]
+    return s

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
+on 512 placeholder host devices and record memory / cost / collective
+analyses for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json and are
+reused unless --force.  EXPERIMENTS.md §Dry-run / §Roofline read them.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+from repro import dist  # noqa: E402
+from repro.configs import ARCHS, get_bundle  # noqa: E402
+from repro.dist.hlo import collective_bytes  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.nn import module as nn  # noqa: E402
+from repro.train.optimizer import init_opt_state  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../experiments/dryrun")
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _attach(sds_tree, shard_tree):
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                        sds_tree, shard_tree)
+
+
+def _replicated_or_param(mesh, s, p_sh):
+    if int(np.prod(s.shape)) > 0 and s.ndim > 0:
+        return p_sh
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def build_cell_args(bundle, cell, model, mesh, rules=None):
+    """Returns (fn, args tuple of SDS-with-sharding, donate_argnums)."""
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    model._params_meta = params_sds
+    values_sds = nn.values(params_sds)
+    p_sh = dist.params_shardings(params_sds, mesh, rules)
+    values_in = _attach(values_sds, p_sh)
+
+    batch_in = {}
+    for name, spec in cell.specs.items():
+        sh = NamedSharding(mesh, dist.resolve_axes(
+            spec.axes, spec.shape, mesh, rules))
+        batch_in[name] = _sds(spec.shape, spec.dtype, sh)
+
+    fn = cell.build(model)
+    if cell.kind == "train":
+        opt_sds = jax.eval_shape(init_opt_state, values_sds)
+        m_sh = jax.tree.map(
+            lambda s, psh: _replicated_or_param(mesh, s, psh),
+            opt_sds["m"], p_sh)
+        v_sh = jax.tree.map(
+            lambda s, psh: _replicated_or_param(mesh, s, psh),
+            opt_sds["v"], p_sh)
+        opt_in = {
+            "m": _attach(opt_sds["m"], m_sh),
+            "v": _attach(opt_sds["v"], v_sh),
+            "step": _sds((), opt_sds["step"].dtype,
+                         NamedSharding(mesh, PartitionSpec())),
+        }
+        return fn, (values_in, opt_in, batch_in), (0, 1)
+    if cell.kind == "decode":
+        caches_sds, caches_axes = cell.state_fn(model)
+        c_sh = jax.tree.map(
+            lambda s, ax: NamedSharding(mesh, dist.resolve_axes(
+                ax, s.shape, mesh, rules)), caches_sds, caches_axes)
+        caches_in = _attach(caches_sds, c_sh)
+        return fn, (values_in, caches_in, batch_in), (1,)
+    return fn, (values_in, batch_in), ()
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             rules=None, save: bool = True, force: bool = False,
+             tag: str = "") -> dict:
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
+    os.makedirs(os.path.join(RESULTS_DIR, mesh_name), exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, mesh_name,
+                            f"{arch}__{shape}.json")
+    if save and not force and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    bundle = get_bundle(arch)
+    cell = bundle.cells[shape]
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "kind": cell.kind, "note": cell.note}
+    if cell.skip:
+        rec["skipped"] = cell.skip
+        if save:
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        model = bundle.make_model(shape)
+        fn, args, donate = build_cell_args(bundle, cell, model, mesh,
+                                           rules)
+        with dist.use_mesh_rules(mesh, rules):
+            jfn = jax.jit(fn, donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+        except Exception as e:  # noqa: BLE001
+            mem["error"] = str(e)
+        coll = collective_bytes(compiled.as_text())
+
+        comp_term = flops / PEAK_FLOPS_BF16
+        mem_term = bytes_acc / HBM_BW
+        coll_term = coll["total_bytes"] / ICI_BW
+        terms = {"compute_s": comp_term, "memory_s": mem_term,
+                 "collective_s": coll_term}
+        rec.update({
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_acc,
+            "collectives": coll,
+            "memory": mem,
+            "roofline_terms_s": terms,
+            "bottleneck": max(terms, key=terms.get),
+        })
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="results subdir suffix "
+                    "(perf-iteration variants)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in get_bundle(arch).cells:
+                cells.append((arch, shape))
+    else:
+        arch = args.arch or ARCHS[0]
+        shapes = [args.shape] if args.shape else \
+            list(get_bundle(arch).cells)
+        cells = [(arch, s) for s in shapes]
+
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       force=args.force, tag=args.tag)
+        status = ("SKIP: " + rec["skipped"][:60] if "skipped" in rec
+                  else "ERROR: " + rec.get("error", "")[:120]
+                  if "error" in rec else
+                  f"ok compile={rec['compile_s']}s "
+                  f"bottleneck={rec['bottleneck']} "
+                  f"terms={ {k: f'{v:.2e}' for k, v in rec['roofline_terms_s'].items()} }")
+        print(f"[{rec['mesh']}] {arch:>24s} × {shape:<14s} {status}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders (TPU v5e pods).
+
+A function, not a module constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests."""
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,63 @@
+"""Serving entrypoint: batched retrieval / scoring replica loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval-jpq \
+        --requests 20 --batch-size 64
+
+Loads the arch's smoke config (or a checkpoint via --ckpt-dir), jits the
+serve program, and drives batched requests through it, reporting
+latency percentiles — the serve_p99 cell's runnable counterpart.
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="two-tower-retrieval-jpq")
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_bundle
+    from repro.nn import module as nn
+
+    bundle = get_bundle(args.arch)
+    model, batch, rng = bundle.make_smoke()
+    params = model.init_params(rng)
+    if args.ckpt_dir:
+        from repro.ckpt import restore_checkpoint
+        values, step = restore_checkpoint(args.ckpt_dir, nn.values(params))
+        params = nn.with_values(params, values)
+        print(f"restored step {step} from {args.ckpt_dir}")
+
+    if hasattr(model, "retrieve"):
+        fn = jax.jit(lambda p, b: model.retrieve(p, b, top_k=10))
+    else:
+        fn = jax.jit(model.serve)
+
+    # replicate the smoke batch to the requested batch size
+    def tile(v):
+        v = jnp.asarray(v)
+        reps = max(args.batch_size // v.shape[0], 1)
+        return jnp.concatenate([v] * reps, 0)[:args.batch_size]
+
+    req = {k: tile(v) for k, v in batch.items()
+           if k not in ("label", "labels")}
+    jax.block_until_ready(fn(params, req))      # compile
+    lats = []
+    for _ in range(args.requests):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, req))
+        lats.append((time.perf_counter() - t0) * 1e3)
+    lats = np.asarray(lats)
+    print(f"{args.arch}: batch={args.batch_size} n={args.requests} "
+          f"p50={np.percentile(lats, 50):.2f}ms "
+          f"p99={np.percentile(lats, 99):.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: paper backbones + the 10 assigned architectures."""

@@ -1,0 +1,280 @@
+"""Generic decoder-only transformer LM covering the assigned LM archs:
+
+  mixtral-8x7b   GQA 32/8, SwiGLU MoE 8e top-2, sliding-window 4096
+  olmoe-1b-7b    GQA 16/16, MoE 64e top-8 (fine-grained, d_ff 1024)
+  stablelm-12b   GQA 32/8, dense SwiGLU
+  qwen3-14b      GQA 40/8, dense SwiGLU, qk-norm
+  stablelm-1.6b  GQA 32/32, dense SwiGLU
+
+One definition, config-driven.  Layers are scanned (stacked params with
+a leading "layers" axis) so the HLO stays compact at 32–40 layers; an
+optional remat policy wraps the block for activation checkpointing.
+
+Three lowered programs per arch (what the dry-run compiles):
+  train_step  - causal LM loss over [B, S] token batches
+  prefill     - full forward returning KV caches + last-position logits
+  decode_step - one token against per-layer KV caches (ring-buffered for
+                sliding-window archs, so mixtral's long_500k cell runs
+                with an O(window) cache — the sub-quadratic path)
+
+The vocab table goes through repro.core's embedding factory: the
+beyond-paper experiment applies RecJPQ to the vocab + tied softmax via
+the partial-score trick (``embedding.kind = "jpq"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.core import EmbeddingConfig, make_embedding
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+from repro.nn import layers as L
+from repro.nn.attention import (AttnConfig, attention, attention_init,
+                                decode_step as attn_decode, init_cache)
+from repro.nn.moe import MoEConfig, moe_init, moe_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    window: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    embedding: Optional[EmbeddingConfig] = None   # None -> full table
+    scan_layers: bool = True
+    remat: bool = True
+    compute_dtype: str = "bfloat16"
+    q_chunk: Optional[int] = None      # flash-style attention blocking
+    logits_bf16: bool = False          # CE logits in bf16 (fp32 lse)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv=self.n_kv, head_dim=self.hd,
+                          qk_norm=self.qk_norm, causal=True,
+                          window=self.window, rope=True,
+                          rope_theta=self.rope_theta,
+                          q_chunk=self.q_chunk)
+
+    def emb_cfg(self) -> EmbeddingConfig:
+        if self.embedding is not None:
+            return dataclasses.replace(self.embedding, n_items=self.vocab,
+                                       d=self.d_model)
+        return EmbeddingConfig(n_items=self.vocab, d=self.d_model)
+
+    def param_count(self) -> int:
+        d, f, L_, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        attn = d * self.hd * (self.n_heads * 2 + self.n_kv * 2)
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * f
+        return L_ * (attn + ffn + 2 * d) + 2 * V * d + d
+
+    def active_param_count(self) -> int:
+        """6·N_active·D convention for MoE rooflines."""
+        d, L_, V = self.d_model, self.n_layers, self.vocab
+        attn = d * self.hd * (self.n_heads * 2 + self.n_kv * 2)
+        if self.moe:
+            ffn = self.moe.top_k * 3 * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        return L_ * (attn + ffn + 2 * d) + 2 * V * d + d
+
+
+class TransformerLM:
+    def __init__(self, cfg: LMConfig, codes=None):
+        self.cfg = cfg
+        self.emb = make_embedding(cfg.emb_cfg())
+        self._codes = codes
+        self.acfg = cfg.attn_cfg()
+
+    # ------------------------------------------------------------ init
+    def _block_init(self, kg: KeyGen):
+        cfg = self.cfg
+        norm_init = (L.rmsnorm_init if cfg.norm == "rmsnorm"
+                     else L.layernorm_init)
+        blk = {
+            "ln1": norm_init(cfg.d_model),
+            "attn": attention_init(kg, self.acfg),
+            "ln2": norm_init(cfg.d_model),
+        }
+        if cfg.moe is not None:
+            blk["moe"] = moe_init(kg, cfg.moe)
+        else:
+            blk["mlp"] = L.gated_mlp_init(kg, cfg.d_model, cfg.d_ff)
+        return blk
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        blocks = [self._block_init(kg) for _ in range(cfg.n_layers)]
+        tok_emb = self.emb.init(kg, codes=self._codes)
+        if "table" in tok_emb:
+            # §Perf iteration 4: 2D-shard the vocab table
+            # (rows -> model TP, cols -> data FSDP) so the lookup's
+            # mask+psum payload is [B, S, d/|data|], not [B, S, d].
+            tok_emb["table"] = P(tok_emb["table"].value,
+                                 ("vocab", "embed"))
+        p = {
+            "tok_emb": tok_emb,
+            "blocks": nn.stack_params(blocks) if cfg.scan_layers else blocks,
+            "ln_f": (L.rmsnorm_init if cfg.norm == "rmsnorm"
+                     else L.layernorm_init)(cfg.d_model),
+        }
+        if cfg.emb_cfg().kind == "full":
+            p["lm_head"] = P(
+                nn.lecun_normal(kg(), (cfg.d_model, cfg.vocab)),
+                ("embed", "vocab"))
+        return p
+
+    # ----------------------------------------------------------- block
+    def _norm(self, pn, x):
+        return (L.rmsnorm if self.cfg.norm == "rmsnorm"
+                else L.layernorm)(pn, x)
+
+    def _block(self, blk, x, pad_mask=None):
+        cfg = self.cfg
+        x = dist.constrain(x, ("batch", "seq", "act_embed"))
+        h = attention(blk["attn"], self.acfg, self._norm(blk["ln1"], x),
+                      pad_mask=pad_mask)
+        x = x + h
+        hn = self._norm(blk["ln2"], x)
+        if cfg.moe is not None:
+            B, S, d = hn.shape
+            y, aux = moe_apply(blk["moe"], cfg.moe, hn.reshape(B * S, d))
+            y = y.reshape(B, S, d)
+        else:
+            y, aux = L.gated_mlp(blk["mlp"], hn), 0.0
+        x = x + y
+        x = dist.constrain(x, ("batch", "seq", "act_embed"))
+        return x, aux
+
+    # --------------------------------------------------------- forward
+    def hidden_states(self, p, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = self.emb.lookup(p["tok_emb"], tokens).astype(dt)
+        aux_total = 0.0
+        if cfg.scan_layers:
+            blocks_v = nn.values(p["blocks"])
+            # per-layer metadata: strip the leading "layers" axis name
+            blocks_meta = jax.tree.map(
+                lambda q: P(q.value[0], q.axes[1:]), p["blocks"],
+                is_leaf=nn.is_param)
+
+            def body(carry, layer_v):
+                xc, aux = carry
+                layer = nn.with_values(blocks_meta, layer_v)
+                xo, a = self._block(layer, xc)
+                return (xo, aux + a), None
+
+            block_fn = jax.checkpoint(body) if cfg.remat else body
+            (x, aux_total), _ = jax.lax.scan(
+                block_fn, (x, jnp.zeros((), jnp.float32)), blocks_v)
+        else:
+            for blk in p["blocks"]:
+                block = self._block
+                if cfg.remat:
+                    block = jax.checkpoint(self._block)
+                x, a = block(blk, x)
+                aux_total = aux_total + a
+        x = self._norm(p["ln_f"], x)
+        return x, aux_total
+
+    def logits(self, p, h):
+        if "lm_head" in p:
+            if self.cfg.logits_bf16:
+                return (h.astype(jnp.bfloat16)
+                        @ p["lm_head"].value.astype(jnp.bfloat16))
+            return h.astype(jnp.float32) @ p["lm_head"].value
+        return self.emb.logits(p["tok_emb"], h)
+
+    # ------------------------------------------------------------ loss
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        tokens, targets = batch["tokens"], batch["targets"]
+        h, aux = self.hidden_states(p, tokens)
+        logits = self.logits(p, h)
+        logits = dist.constrain(logits, ("batch", "seq", "vocab"))
+        # reductions in fp32 (the cast fuses; bf16 logits stay bf16 in HBM)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+        picked = jnp.take_along_axis(
+            logits, targets[..., None].astype(jnp.int32), -1)[..., 0]
+        ce = jnp.mean(lse - picked.astype(jnp.float32))
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    # ----------------------------------------------------------- serve
+    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """Stacked per-layer KV caches [L, ...]."""
+        one = init_cache(self.acfg, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (self.cfg.n_layers,) + x.shape).copy(), one)
+
+    def prefill(self, p, tokens):
+        """Full causal forward; returns last-position logits (the caches
+        in a production server would be written via scan — the dry-run
+        cost of prefill is the forward itself)."""
+        h, _ = self.hidden_states(p, tokens)
+        return self.logits(p, h[:, -1:, :])
+
+    def _decode_block(self, layer, xc, cache):
+        cfg = self.cfg
+        xn = self._norm(layer["ln1"], xc)
+        h, new_cache = attn_decode(layer["attn"], self.acfg, xn, cache)
+        xc = xc + h
+        hn = self._norm(layer["ln2"], xc)
+        if cfg.moe is not None:
+            B = hn.shape[0]
+            y, _ = moe_apply(layer["moe"], cfg.moe,
+                             hn.reshape(B, cfg.d_model))
+            y = y.reshape(B, 1, cfg.d_model)
+        else:
+            y = L.gated_mlp(layer["mlp"], hn)
+        return xc + y, new_cache
+
+    def decode_step(self, p, token, caches):
+        """token [B, 1] int; caches stacked [L, ...] -> (logits, caches)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = self.emb.lookup(p["tok_emb"], token).astype(dt)
+        if cfg.scan_layers:
+            blocks_meta = jax.tree.map(
+                lambda q: P(q.value[0], q.axes[1:]), p["blocks"],
+                is_leaf=nn.is_param)
+            blocks_v = nn.values(p["blocks"])
+
+            def body(xc, scanned):
+                layer_v, cache = scanned
+                layer = nn.with_values(blocks_meta, layer_v)
+                return self._decode_block(layer, xc, cache)
+
+            x, new_caches = jax.lax.scan(body, x, (blocks_v, caches))
+        else:
+            new_list = []
+            for i, blk in enumerate(p["blocks"]):
+                cache_i = jax.tree.map(lambda c: c[i], caches)
+                x, nc = self._decode_block(blk, x, cache_i)
+                new_list.append(nc)
+            new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *new_list)
+        x = self._norm(p["ln_f"], x)
+        return self.logits(p, x), new_caches

@@ -1,0 +1,217 @@
+"""MACE: higher-order E(3)-equivariant message passing (arXiv:2206.07697).
+
+TPU-native adaptation notes (DESIGN.md §Hardware adaptation):
+  * message passing = gather (edge endpoints) -> per-edge dense math ->
+    ``jax.ops.segment_sum`` scatter; no sparse formats (JAX is BCOO-only
+    and TPUs want dense tiles anyway);
+  * the O(L⁶) generalized Clebsch-Gordan contractions of the reference
+    CUDA/e3nn implementation are replaced by iterated pairwise products
+    through exact real-Gaunt intertwiners (repro.models.equivariant) —
+    at l_max=2 / correlation 3 this spans the same symmetric product
+    space with a handful of [.., C, m1]×[.., C, m2]→[.., C, m3] einsums,
+    each MXU-friendly and channel-parallel;
+  * RecJPQ is *inapplicable* here (no large id-embedding table) — MACE is
+    implemented without the technique, per DESIGN.md §Arch-applicability.
+
+Heads: 'energy' (molecule cells — per-graph scalar regression, the
+paper's native task) and 'node_class' (citation/products cells — node
+classification on l=0 features).
+
+Batch dict (padded, fixed shapes):
+  positions [N, 3]  float     node coordinates (synthetic for non-3D data)
+  features  [N, F]  float     input node features (or one-hot species)
+  senders   [E]     int32     edge source index (pad: 0, masked)
+  receivers [E]     int32     edge target index
+  edge_mask [E]     float     1 = real edge
+  node_mask [N]     float     1 = real node
+  graph_id  [N]     int32     which graph (for batched small graphs)
+  labels    ...               task-dependent
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+from repro.nn import layers as L
+from repro.models.equivariant import (bessel_rbf, cg_product, product_paths,
+                                      spherical_harmonics)
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    n_layers: int = 2
+    channels: int = 128         # d_hidden
+    lmax: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    d_feat: int = 64            # input feature width
+    r_cut: float = 1.0
+    avg_neighbors: float = 10.0  # A-basis normalisation (conditioning)
+    head: str = "energy"        # energy | node_class
+    n_classes: int = 47
+    n_graphs: int = 1           # batched small graphs
+
+    @property
+    def irrep_dims(self):
+        return {l: 2 * l + 1 for l in range(self.lmax + 1)}
+
+
+def _paths(lmax):
+    return product_paths(lmax)
+
+
+class MACE:
+    def __init__(self, cfg: MACEConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ init
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        C = cfg.channels
+        p = {"embed": L.linear_init(kg, cfg.d_feat, C,
+                                    axes=("features", "embed"))}
+        layers = []
+        for _ in range(cfg.n_layers):
+            lp = {
+                # per-path radial weights: rbf -> per-channel scale
+                "radial": {f"p{l1}{l2}{l3}": L.linear_init(
+                    kg, cfg.n_rbf, C, axes=(None, "embed"), bias=False)
+                    for (l1, l2, l3) in _paths(cfg.lmax)},
+                # channel mixers per output l of the A-basis
+                "mix_a": {f"l{l}": P(nn.lecun_normal(kg(), (C, C)),
+                                     ("embed", "embed"))
+                          for l in range(cfg.lmax + 1)},
+                # product-basis (higher correlation) channel weights
+                "prod_w": {},
+                # message linear + residual per l
+                "msg": {f"l{l}": P(nn.lecun_normal(kg(), (C, C)),
+                                   ("embed", "embed"))
+                        for l in range(cfg.lmax + 1)},
+                "res": {f"l{l}": P(nn.lecun_normal(kg(), (C, C)),
+                                   ("embed", "embed"))
+                        for l in range(cfg.lmax + 1)},
+            }
+            # correlation >= 2 path weights (iterated products)
+            for order in range(2, cfg.correlation + 1):
+                for (l1, l2, l3) in _paths(cfg.lmax):
+                    lp["prod_w"][f"o{order}_p{l1}{l2}{l3}"] = P(
+                        0.1 * jax.random.normal(kg(), (C,)), ("embed",))
+            layers.append(lp)
+        p["layers"] = layers
+        if cfg.head == "energy":
+            p["readout"] = L.mlp_init(kg, [C, C // 2, 1],
+                                      axes=("embed", "mlp"))
+        else:
+            p["readout"] = L.mlp_init(kg, [C, C, cfg.n_classes],
+                                      axes=("embed", "mlp"))
+        return p
+
+    # -------------------------------------------------------- interact
+    def _interaction(self, lp, h, edges):
+        """One MACE layer. h: {l: [N, C, 2l+1]}."""
+        cfg = self.cfg
+        C = cfg.channels
+        send, recv, rbf, sh, emask = edges
+        N = h[0].shape[0]
+
+        # ---- A-basis: sum_j R(r_ij) (h_j^{l1} x Y^{l2})^{l3}
+        A = {l: jnp.zeros((N, C, 2 * l + 1), h[0].dtype)
+             for l in range(cfg.lmax + 1)}
+        for (l1, l2, l3) in _paths(cfg.lmax):
+            if l1 not in h:
+                continue
+            hj = jnp.take(h[l1], send, axis=0)            # [E, C, 2l1+1]
+            R = L.linear(lp["radial"][f"p{l1}{l2}{l3}"], rbf)  # [E, C]
+            msg = cg_product(hj[..., :, :],
+                             sh[l2][:, None, :], l1, l2, l3)   # [E, C, 2l3+1]
+            msg = msg * (R * emask[:, None])[..., None]
+            A[l3] = A[l3] + jax.ops.segment_sum(msg, recv, N) \
+                / jnp.asarray(cfg.avg_neighbors ** 0.5, msg.dtype)
+        A = {l: dist.constrain(
+            jnp.einsum("ncm,cd->ndm", A[l],
+                       lp["mix_a"][f"l{l}"].value.astype(A[l].dtype)),
+            ("nodes", None, None)) for l in A}
+
+        # ---- product basis: iterated equivariant powers of A
+        B = {l: A[l] for l in A}
+        cur = A
+        for order in range(2, cfg.correlation + 1):
+            nxt = {l: jnp.zeros_like(A[l]) for l in A}
+            for (l1, l2, l3) in _paths(cfg.lmax):
+                w = lp["prod_w"][f"o{order}_p{l1}{l2}{l3}"].value
+                prod = cg_product(cur[l1], A[l2], l1, l2, l3)
+                nxt[l3] = nxt[l3] + w[None, :, None].astype(prod.dtype) * prod
+            B = {l: B[l] + nxt[l] for l in B}
+            cur = nxt
+
+        # ---- message + residual update
+        out = {}
+        for l in B:
+            m = jnp.einsum("ncm,cd->ndm", B[l],
+                           lp["msg"][f"l{l}"].value.astype(B[l].dtype))
+            r = jnp.einsum("ncm,cd->ndm", h[l],
+                           lp["res"][f"l{l}"].value.astype(B[l].dtype)) \
+                if l in h else 0.0
+            out[l] = dist.constrain(m + r, ("nodes", None, None))
+        return out
+
+    # --------------------------------------------------------- forward
+    def node_features(self, p, batch):
+        cfg = self.cfg
+        pos = batch["positions"]
+        send, recv = batch["senders"], batch["receivers"]
+        emask = batch["edge_mask"].astype(pos.dtype)
+        vec = jnp.take(pos, recv, axis=0) - jnp.take(pos, send, axis=0)
+        r = jnp.linalg.norm(vec, axis=-1)
+        rbf = bessel_rbf(r, cfg.n_rbf, cfg.r_cut)         # [E, n_rbf]
+        sh = spherical_harmonics(vec, cfg.lmax)           # {l: [E, 2l+1]}
+
+        h0 = L.linear(p["embed"], batch["features"])      # [N, C]
+        h = {0: h0[..., None]}                            # l=0 irrep
+        edges = (send, recv, rbf, sh, emask)
+        for lp in p["layers"]:
+            h = self._interaction(lp, h, edges)
+        return h
+
+    def scalars(self, p, batch):
+        h = self.node_features(p, batch)
+        return h[0][..., 0]                               # [N, C] invariant
+
+    # ------------------------------------------------------------ loss
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        cfg = self.cfg
+        s = self.scalars(p, batch)                        # [N, C]
+        nmask = batch["node_mask"]
+        if cfg.head == "energy":
+            node_e = L.mlp(p["readout"], s)[..., 0] * nmask   # [N]
+            energy = jax.ops.segment_sum(node_e, batch["graph_id"],
+                                         cfg.n_graphs)        # [G]
+            err = energy - batch["labels"]
+            loss = jnp.mean(jnp.square(err))
+            return loss, {"loss": loss, "mae": jnp.mean(jnp.abs(err))}
+        logits = L.mlp(p["readout"], s)                   # [N, n_classes]
+        lse = jax.nn.logsumexp(logits, -1)
+        picked = jnp.take_along_axis(
+            logits, batch["labels"][:, None].astype(jnp.int32), -1)[..., 0]
+        ce = (lse - picked) * nmask
+        loss = jnp.sum(ce) / jnp.maximum(jnp.sum(nmask), 1.0)
+        acc = jnp.sum((jnp.argmax(logits, -1) == batch["labels"]) * nmask) \
+            / jnp.maximum(jnp.sum(nmask), 1.0)
+        return loss, {"loss": loss, "acc": acc}
+
+    def serve(self, p, batch):
+        cfg = self.cfg
+        s = self.scalars(p, batch)
+        if cfg.head == "energy":
+            node_e = L.mlp(p["readout"], s)[..., 0] * batch["node_mask"]
+            return jax.ops.segment_sum(node_e, batch["graph_id"],
+                                       cfg.n_graphs)
+        return L.mlp(p["readout"], s)

@@ -1,0 +1,443 @@
+"""RecSys architectures: two-tower retrieval, FM, DLRM-RM2, DIEN.
+
+All sparse id tables go through ``repro.core``'s embedding factory, so
+RecJPQ (the paper's technique) is a per-table config switch — this is
+the paper's native regime (large-catalogue id embeddings).  EmbeddingBag
+is gather+segment_sum per the JAX taxonomy, with the fused Pallas kernel
+available for the full-table kind.
+
+Batch layouts (fixed shapes, host pipeline pads):
+  two-tower : user_hist [B, H] item ids (0 pad), pos_item [B]
+  fm/dlrm   : dense [B, 13?], sparse ids [B, n_fields] (one id per field)
+  dien      : hist [B, S], hist_neg [B, S], target [B], label [B]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.core import EmbeddingConfig, make_embedding
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+from repro.nn import layers as L
+from repro.nn.recurrent import gru_init, gru_scan
+
+
+# =============================================================== two-tower
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 256
+    tower_mlp: Sequence[int] = (1024, 512, 256)
+    hist_len: int = 50
+    embedding: Optional[EmbeddingConfig] = None
+    logq_correction: bool = True
+    # §Perf iteration 2: "local" computes in-batch softmax within
+    # data-shard groups ([G, b, b] logits) instead of one global
+    # [B, B] matrix — the standard production trade (fewer negatives
+    # per positive, massively smaller score matrix).
+    negatives: str = "global"          # global | local
+
+    def emb_cfg(self) -> EmbeddingConfig:
+        base = self.embedding or EmbeddingConfig(n_items=0, d=0)
+        # row count padded so the table shards over any production mesh
+        n_rows = (self.n_items + 1 + 511) // 512 * 512
+        return dataclasses.replace(base, n_items=n_rows,
+                                   d=self.embed_dim)
+
+
+class TwoTower:
+    """Sampled-softmax retrieval (YouTube DNN / RecSys'19 style).
+
+    User tower: mean-pooled history embedding -> MLP (tower_mlp, ending
+    at embed_dim); item side: the embedding table itself (the classic
+    output-layer-as-item-embeddings formulation) — which is exactly the
+    regime RecJPQ compresses.  Training uses in-batch sampled softmax
+    with logQ correction; serving scores the 10⁶-candidate catalogue
+    through ``emb.logits`` — with kind="jpq" that is the paper's
+    partial-score trick (Pallas kernel on TPU).
+    """
+
+    def __init__(self, cfg: TwoTowerConfig, codes=None):
+        self.cfg = cfg
+        self.emb = make_embedding(cfg.emb_cfg())
+        self._codes = codes
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        dims = [cfg.embed_dim, *cfg.tower_mlp, cfg.embed_dim]
+        return {
+            "item_emb": self.emb.init(kg, codes=self._codes),
+            "user_mlp": L.mlp_init(kg, dims),
+        }
+
+    def user_vec(self, p, user_hist):
+        mask = (user_hist > 0).astype(jnp.float32)
+        if self.cfg.emb_cfg().kind == "full":
+            # §Perf iteration 1: row-local gather + pool, psum [B, d]
+            from repro.core import sharded
+            pooled = sharded.pooled_lookup(
+                p["item_emb"]["table"].value, user_hist, mask)
+        else:
+            e = self.emb.lookup(p["item_emb"], user_hist)  # [B, H, d]
+            pooled = jnp.sum(e * mask[..., None], 1)
+        pooled = pooled / jnp.maximum(jnp.sum(mask, 1, keepdims=True), 1.0)
+        return L.mlp(p["user_mlp"], pooled)                # [B, d]
+
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        cfg = self.cfg
+        u = self.user_vec(p, batch["user_hist"])           # [B, d]
+        v = self.emb.lookup(p["item_emb"], batch["pos_item"])
+        B = u.shape[0]
+        G = 1
+        if cfg.negatives == "local":
+            G = dist.data_shard_count()
+            G = G if B % G == 0 else 1
+        b = B // G
+        ug = dist.constrain(u.reshape(G, b, -1), ("batch", None, None))
+        vg = dist.constrain(v.reshape(G, b, -1), ("batch", None, None))
+        logits = jnp.einsum("gbd,gcd->gbc", ug, vg)        # in-batch
+        if cfg.logq_correction and "logq" in batch:
+            logits = logits - batch["logq"].reshape(G, 1, b)
+        lse = jax.nn.logsumexp(logits, -1)                 # [G, b]
+        picked = jnp.diagonal(logits, axis1=1, axis2=2)    # [G, b]
+        loss = jnp.mean(lse - picked)
+        acc = jnp.mean(jnp.argmax(logits, -1)
+                       == jnp.arange(b)[None, :])
+        return loss, {"loss": loss, "in_batch_acc": acc}
+
+    def retrieve(self, p, batch, *, top_k: int = 100):
+        """Score user(s) against the full catalogue; returns top-k.
+        With kind="jpq" the catalogue read is m bytes/item (codes) not
+        4d — the paper's compression as a serving bandwidth win.
+        Top-k is hierarchical (shard-local then merged)."""
+        from repro.core import sharded
+        u = self.user_vec(p, batch["user_hist"])           # [B, d]
+        scores = self.emb.logits(p["item_emb"], u)         # [B, n_rows]
+        scores = dist.constrain(scores, ("batch", "items"))
+        return sharded.topk_over_items(scores, top_k)
+
+    def bulk_retrieve(self, p, batch, *, top_k: int = 100,
+                      chunk: int = 2048):
+        """Offline scoring: whole user base against the catalogue,
+        chunked with lax.map so [B, n_items] never materialises."""
+        hist = batch["user_hist"]                          # [B, H]
+        B, H = hist.shape
+        n_chunks = B // chunk
+
+        def f(h):
+            u = self.user_vec(p, h)
+            s = self.emb.logits(p["item_emb"], u)
+            return jax.lax.top_k(s, top_k)
+
+        vals, idx = jax.lax.map(f, hist.reshape(n_chunks, chunk, H))
+        return vals.reshape(B, top_k), idx.reshape(B, top_k)
+
+
+# ===================================================================== FM
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    n_fields: int = 39
+    vocab_sizes: Optional[Sequence[int]] = None     # default: 1e4 each
+    embed_dim: int = 10
+    embedding: Optional[EmbeddingConfig] = None
+
+    def vocabs(self):
+        return list(self.vocab_sizes) if self.vocab_sizes else \
+            [10_000] * self.n_fields
+
+
+class FM:
+    """Factorisation Machine (Rendle ICDM'10), 2-way interactions via the
+    O(nk) sum-square trick.  One shared "mega-table" with per-field row
+    offsets (production DLRM layout) -> one embedding object, JPQ-able."""
+
+    def __init__(self, cfg: FMConfig, codes=None):
+        self.cfg = cfg
+        vocabs = cfg.vocabs()
+        self.offsets = jnp.asarray(
+            [0] + list(jnp.cumsum(jnp.asarray(vocabs))[:-1]), jnp.int32)
+        total = int(sum(vocabs))
+        base = cfg.embedding or EmbeddingConfig(n_items=0, d=0)
+        self.emb = make_embedding(dataclasses.replace(
+            base, n_items=total, d=cfg.embed_dim))
+        self._codes = codes
+
+    def init_params(self, rng):
+        kg = KeyGen(rng)
+        total = sum(self.cfg.vocabs())
+        return {
+            "emb": self.emb.init(kg, codes=self._codes),
+            "linear": P(0.01 * jax.random.normal(kg(), (total,)),
+                        ("table",)),
+            "bias": P(jnp.zeros(()), ()),
+        }
+
+    def scores(self, p, sparse_ids):
+        """sparse_ids [B, F] per-field ids -> logit [B]."""
+        flat = sparse_ids + self.offsets[None, :]
+        v = self.emb.lookup(p["emb"], flat)                # [B, F, k]
+        sum_v = jnp.sum(v, 1)
+        sum_sq = jnp.sum(v * v, 1)
+        pair = 0.5 * jnp.sum(sum_v * sum_v - sum_sq, -1)   # [B]
+        lin = jnp.sum(jnp.take(p["linear"].value, flat), 1)
+        return pair + lin + p["bias"].value
+
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        logit = self.scores(p, batch["sparse"])
+        y = batch["label"].astype(jnp.float32)
+        loss = jnp.mean(_bce(logit, y))
+        return loss, {"loss": loss, "auc_proxy": jnp.mean(
+            (logit > 0) == (y > 0.5))}
+
+    def serve(self, p, batch):
+        return jax.nn.sigmoid(self.scores(p, batch["sparse"]))
+
+    def candidate_scores(self, p, batch):
+        """Score every value of field 0 (the item field) for one or more
+        contexts: s_i = const(rest) + w_i + <v_i, sum(rest)> — the FM
+        factorisation makes full-catalogue scoring one ``emb.logits``
+        call (the paper's partial-score trick when kind='jpq')."""
+        rest = batch["sparse_rest"] + self.offsets[None, 1:]   # [B, F-1]
+        vr = self.emb.lookup(p["emb"], rest)                   # [B,F-1,k]
+        rest_sum = jnp.sum(vr, 1)                              # [B, k]
+        v0 = int(self.cfg.vocabs()[0])
+        inter = self.emb.logits(p["emb"], rest_sum)[..., :v0]  # [B, V0]
+        lin = p["linear"].value[:v0][None, :]
+        # context-constant terms (pairwise among rest + linear + bias)
+        sum_sq = jnp.sum(vr * vr, 1)
+        c_pair = 0.5 * jnp.sum(rest_sum * rest_sum - sum_sq, -1)
+        c_lin = jnp.sum(jnp.take(p["linear"].value, rest), 1)
+        const = (c_pair + c_lin + p["bias"].value)[:, None]
+        return inter + lin + const                             # [B, V0]
+
+
+# =================================================================== DLRM
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Sequence[int] = (512, 256, 64)
+    top_mlp: Sequence[int] = (512, 512, 256, 1)
+    vocab_sizes: Optional[Sequence[int]] = None
+    embedding: Optional[EmbeddingConfig] = None
+
+    def vocabs(self):
+        if self.vocab_sizes:
+            return list(self.vocab_sizes)
+        # RM2-flavoured mix: a few huge tables + many small ones
+        sizes = []
+        for i in range(self.n_sparse):
+            sizes.append([40_000_000, 4_000_000, 400_000, 40_000, 4_000]
+                         [i % 5])
+        return sizes
+
+
+class DLRM:
+    """DLRM (arXiv:1906.00091) with dot interaction, shared mega-table."""
+
+    def __init__(self, cfg: DLRMConfig, codes=None):
+        self.cfg = cfg
+        vocabs = cfg.vocabs()
+        import numpy as np
+        off = np.zeros(len(vocabs), np.int64)
+        off[1:] = np.cumsum(vocabs)[:-1]
+        self.offsets = jnp.asarray(off, jnp.int32)
+        total = int(sum(vocabs))
+        base = cfg.embedding or EmbeddingConfig(n_items=0, d=0)
+        self.emb = make_embedding(dataclasses.replace(
+            base, n_items=total, d=cfg.embed_dim))
+        self._codes = codes
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        F = cfg.n_sparse + 1
+        n_pairs = F * (F - 1) // 2
+        top_in = n_pairs + cfg.bot_mlp[-1]
+        return {
+            "emb": self.emb.init(kg, codes=self._codes),
+            "bot": L.mlp_init(kg, [cfg.n_dense, *cfg.bot_mlp]),
+            "top": L.mlp_init(kg, [top_in, *cfg.top_mlp]),
+        }
+
+    def scores(self, p, dense, sparse_ids):
+        cfg = self.cfg
+        x = L.mlp(p["bot"], dense, final_act=True)          # [B, d]
+        flat = sparse_ids + self.offsets[None, :]
+        e = self.emb.lookup(p["emb"], flat)                 # [B, F, d]
+        feats = jnp.concatenate([x[:, None, :], e], 1)      # [B, F+1, d]
+        feats = dist.constrain(feats, ("batch", None, None))
+        gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+        F = feats.shape[1]
+        iu = jnp.triu_indices(F, k=1)
+        pairs = gram[:, iu[0], iu[1]]                       # [B, F(F-1)/2]
+        z = jnp.concatenate([x, pairs], -1)
+        return L.mlp(p["top"], z)[..., 0]
+
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        logit = self.scores(p, batch["dense"], batch["sparse"])
+        y = batch["label"].astype(jnp.float32)
+        loss = jnp.mean(_bce(logit, y))
+        return loss, {"loss": loss}
+
+    def serve(self, p, batch):
+        return jax.nn.sigmoid(self.scores(p, batch["dense"],
+                                          batch["sparse"]))
+
+    def score_candidates(self, p, batch, *, chunk: int = 4000):
+        """Rank a candidate list for one context.  DLRM's top-MLP is not
+        factorisable over items, so candidates run through the full
+        interaction in lax.map chunks (never materialising [NC, ...]).
+        chunk must divide len(candidates) (4000 | 1e6)."""
+        cands = batch["candidates"]                         # [NC]
+        dense = batch["dense"]                              # [1, n_dense]
+        rest = batch["sparse_rest"]                         # [1, n_sp-1]
+        NC = cands.shape[0]
+
+        def f(c):
+            B = c.shape[0]
+            d = jnp.broadcast_to(dense, (B, dense.shape[1]))
+            s = jnp.concatenate(
+                [c[:, None], jnp.broadcast_to(rest, (B, rest.shape[1]))], 1)
+            return self.scores(p, d, s)
+
+        out = jax.lax.map(f, cands.reshape(NC // chunk, chunk))
+        return out.reshape(NC)
+
+
+# =================================================================== DIEN
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    n_items: int = 1_000_000
+    n_cats: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: Sequence[int] = (200, 80)
+    embedding: Optional[EmbeddingConfig] = None
+    aux_loss_weight: float = 0.1
+
+    def emb_cfg(self) -> EmbeddingConfig:
+        base = self.embedding or EmbeddingConfig(n_items=0, d=0)
+        return dataclasses.replace(base, n_items=self.n_items + 1,
+                                   d=self.embed_dim)
+
+
+class DIEN:
+    """Deep Interest Evolution Network (arXiv:1809.03672).
+
+    Interest extraction GRU over behaviour embeddings + auxiliary loss,
+    target-attention scores, interest-evolution AUGRU, final MLP.
+    """
+
+    def __init__(self, cfg: DIENConfig, codes=None):
+        self.cfg = cfg
+        self.emb = make_embedding(cfg.emb_cfg())
+        self._codes = codes
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        d, g = cfg.embed_dim, cfg.gru_dim
+        return {
+            "item_emb": self.emb.init(kg, codes=self._codes),
+            "gru1": gru_init(kg, d, g),
+            "att": L.mlp_init(kg, [3 * g, 36, 1]),
+            "augru": gru_init(kg, g, g),
+            "fc": L.mlp_init(kg, [g + 2 * d, *cfg.mlp, 1]),
+            "tgt_proj": L.linear_init(kg, d, g, axes=("embed", "mlp")),
+            "aux": L.mlp_init(kg, [g + d, 32, 1]),
+        }
+
+    def _interest(self, p, hist):
+        e = self.emb.lookup(p["item_emb"], hist)            # [B, S, d]
+        states, _ = gru_scan(p["gru1"], e)                  # [B, S, g]
+        return e, states
+
+    def train_loss(self, p, batch, rng=None):
+        del rng
+        cfg = self.cfg
+        hist, target, y = batch["hist"], batch["target"], batch["label"]
+        mask = (hist > 0).astype(jnp.float32)
+        e, states = self._interest(p, hist)
+
+        # --- auxiliary loss: next-behaviour discrimination on GRU states
+        aux = 0.0
+        if "hist_neg" in batch:
+            e_neg = self.emb.lookup(p["item_emb"], batch["hist_neg"])
+            h_t = states[:, :-1]                            # [B, S-1, g]
+            pos_in = jnp.concatenate([h_t, e[:, 1:]], -1)
+            neg_in = jnp.concatenate([h_t, e_neg[:, 1:]], -1)
+            lp = L.mlp(p["aux"], pos_in)[..., 0]
+            ln = L.mlp(p["aux"], neg_in)[..., 0]
+            m = mask[:, 1:]
+            aux = -(jnp.sum((jax.nn.log_sigmoid(lp)
+                             + jax.nn.log_sigmoid(-ln)) * m)
+                    / jnp.maximum(jnp.sum(m), 1.0))
+
+        logit = self._head(p, e, states, mask, target)
+        y = y.astype(jnp.float32)
+        main = jnp.mean(_bce(logit, y))
+        loss = main + cfg.aux_loss_weight * aux
+        return loss, {"loss": loss, "main": main, "aux": aux}
+
+    def _head(self, p, e, states, mask, target):
+        te = self.emb.lookup(p["item_emb"], target)         # [B, d]
+        tg = L.linear(p["tgt_proj"], te)                    # [B, g]
+        B, S, g = states.shape
+        tgb = jnp.broadcast_to(tg[:, None, :], (B, S, g))
+        att_in = jnp.concatenate([states, tgb, states * tgb], -1)
+        scores = L.mlp(p["att"], att_in)[..., 0]            # [B, S]
+        scores = jnp.where(mask > 0, scores, -1e9)
+        alpha = jax.nn.softmax(scores, -1) * mask
+        _, final = gru_scan(p["augru"], states, attn=alpha)
+        mean_e = jnp.sum(e * mask[..., None], 1) / jnp.maximum(
+            jnp.sum(mask, 1, keepdims=True), 1.0)
+        z = jnp.concatenate([final, te, mean_e], -1)
+        return L.mlp(p["fc"], z)[..., 0]
+
+    def serve(self, p, batch):
+        hist, target = batch["hist"], batch["target"]
+        mask = (hist > 0).astype(jnp.float32)
+        e, states = self._interest(p, hist)
+        return jax.nn.sigmoid(self._head(p, e, states, mask, target))
+
+    def score_candidates(self, p, batch, *, chunk: int = 2000):
+        """Rank candidates for one user.  The interest GRU runs ONCE;
+        only the target-conditioned attention + AUGRU replays per
+        candidate chunk (the DIEN serving trick).  chunk | 1e6."""
+        hist = batch["hist"]                                # [1, S]
+        cands = batch["candidates"]                         # [NC]
+        mask = (hist > 0).astype(jnp.float32)
+        e, states = self._interest(p, hist)                 # [1, S, ...]
+        NC = cands.shape[0]
+        S = hist.shape[1]
+
+        def f(c):
+            B = c.shape[0]
+            eb = jnp.broadcast_to(e, (B,) + e.shape[1:])
+            sb = jnp.broadcast_to(states, (B,) + states.shape[1:])
+            mb = jnp.broadcast_to(mask, (B, S))
+            return self._head(p, eb, sb, mb, c)
+
+        out = jax.lax.map(f, cands.reshape(NC // chunk, chunk))
+        return out.reshape(NC)
+
+
+def _bce(logit, y):
+    return -(y * jax.nn.log_sigmoid(logit)
+             + (1.0 - y) * jax.nn.log_sigmoid(-logit))

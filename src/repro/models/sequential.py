@@ -1,0 +1,203 @@
+"""Sequential recommenders: SASRec, BERT4Rec, GRU4Rec (paper backbones).
+
+All three share the item-embedding abstraction from ``repro.core`` —
+swapping ``embedding.kind`` between full / jpq / qr is the paper's whole
+experiment grid.  Item ids are 1-based; row 0 is padding and row
+``n_items + 1`` is BERT4Rec's [MASK] token, so every embedding table has
+``n_items + 2`` rows.
+
+Losses (paper protocol, Petrov & Macdonald replication setup):
+  full_ce     - softmax over the whole catalogue (BERT4Rec, GRU).
+  sampled_bce - SASRec's original one-negative-per-positive binary CE
+                (needed when the catalogue makes full softmax infeasible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.core import EmbeddingConfig, make_embedding
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+from repro.nn import layers as L
+from repro.nn.attention import AttnConfig, attention, attention_init
+from repro.nn.recurrent import gru_init, gru_scan
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    arch: str                     # sasrec | bert4rec | gru4rec
+    n_items: int
+    max_len: int = 200
+    d_model: int = 512
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 1024
+    embedding: Optional[EmbeddingConfig] = None   # None -> full, d=d_model
+    loss: str = "full_ce"         # full_ce | sampled_bce
+    n_negatives: int = 1
+    dropout: float = 0.0
+    mask_prob: float = 0.2        # bert4rec masking rate
+
+    @property
+    def n_rows(self) -> int:      # pad + items + [MASK]
+        return self.n_items + 2
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items + 1
+
+    def emb_cfg(self) -> EmbeddingConfig:
+        if self.embedding is not None:
+            return dataclasses.replace(self.embedding, n_items=self.n_rows,
+                                       d=self.d_model)
+        return EmbeddingConfig(n_items=self.n_rows, d=self.d_model)
+
+
+def _dropout(key, x, rate):
+    if rate <= 0.0 or key is None:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+
+
+class SeqRecModel:
+    """SASRec / BERT4Rec / GRU4Rec with pluggable item embedding."""
+
+    def __init__(self, cfg: SeqRecConfig, codes=None):
+        self.cfg = cfg
+        self.emb = make_embedding(cfg.emb_cfg())
+        self._codes = codes
+        self.attn_cfg = AttnConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_heads,
+            head_dim=cfg.d_model // cfg.n_heads,
+            causal=(cfg.arch == "sasrec"), rope=False)
+
+    # ------------------------------------------------------------ init
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        p = {"item_emb": self.emb.init(kg, codes=self._codes)}
+        if cfg.arch in ("sasrec", "bert4rec"):
+            p["pos_emb"] = P(0.02 * jax.random.normal(
+                kg(), (cfg.max_len, cfg.d_model)), ("seq", "embed"))
+            blocks = []
+            for _ in range(cfg.n_layers):
+                blocks.append({
+                    "ln1": L.layernorm_init(cfg.d_model),
+                    "attn": attention_init(kg, self.attn_cfg),
+                    "ln2": L.layernorm_init(cfg.d_model),
+                    "mlp": L.dense_mlp_init(kg, cfg.d_model, cfg.d_ff),
+                })
+            p["blocks"] = blocks
+            p["ln_f"] = L.layernorm_init(cfg.d_model)
+        elif cfg.arch == "gru4rec":
+            p["gru"] = [gru_init(kg, cfg.d_model, cfg.d_model)
+                        for _ in range(cfg.n_layers)]
+            p["proj"] = L.linear_init(kg, cfg.d_model, cfg.d_model,
+                                      axes=("embed", "embed"))
+        else:
+            raise ValueError(cfg.arch)
+        return p
+
+    # --------------------------------------------------------- encoder
+    def encode(self, p, seq, *, rng=None):
+        """seq int[B, S] (0 = pad) -> hidden [B, S, d]."""
+        cfg = self.cfg
+        kg = KeyGen(rng) if rng is not None else None
+        x = self.emb.lookup(p["item_emb"], seq)
+        x = jnp.where((seq > 0)[..., None], x, 0.0)
+        pad_mask = seq > 0
+        if cfg.arch in ("sasrec", "bert4rec"):
+            S = seq.shape[1]
+            x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+            x = x + p["pos_emb"].value[:S][None]
+            if kg:
+                x = _dropout(kg(), x, cfg.dropout)
+            for blk in p["blocks"]:
+                h = attention(blk["attn"], self.attn_cfg,
+                              L.layernorm(blk["ln1"], x), pad_mask=pad_mask)
+                if kg:
+                    h = _dropout(kg(), h, cfg.dropout)
+                x = x + h
+                h = L.dense_mlp(blk["mlp"], L.layernorm(blk["ln2"], x))
+                if kg:
+                    h = _dropout(kg(), h, cfg.dropout)
+                x = x + h
+            x = L.layernorm(p["ln_f"], x)
+        else:                                           # gru4rec
+            for gp in p["gru"]:
+                x, _ = gru_scan(gp, x)
+            x = L.linear(p["proj"], x)
+        return x
+
+    # ------------------------------------------------------------ loss
+    def train_loss(self, p, batch, rng=None):
+        cfg = self.cfg
+        if cfg.arch == "bert4rec":
+            return self._masked_lm_loss(p, batch, rng)
+        seq, labels = batch["seq"], batch["labels"]     # [B,S], [B,S]
+        h = self.encode(p, seq, rng=rng)
+        valid = labels > 0
+        if cfg.loss == "full_ce":
+            logits = self.emb.logits(p["item_emb"], h)  # [B,S,R]
+            logits = self._mask_special(logits)
+            ce = _xent(logits, labels)
+            loss = jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1)
+        else:                                           # sampled_bce
+            neg = batch["negatives"]                    # [B,S,K]
+            pos_e = self.emb.lookup(p["item_emb"], labels)
+            neg_e = self.emb.lookup(p["item_emb"], neg)
+            pos_s = jnp.sum(h * pos_e, -1)
+            neg_s = jnp.einsum("bsd,bskd->bsk", h, neg_e)
+            lp = jax.nn.log_sigmoid(pos_s)
+            ln = jnp.sum(jax.nn.log_sigmoid(-neg_s), -1)
+            loss = -jnp.sum((lp + ln) * valid) / jnp.maximum(
+                jnp.sum(valid), 1)
+        return loss, {"loss": loss}
+
+    def _masked_lm_loss(self, p, batch, rng):
+        """BERT4Rec: batch carries pre-masked inputs + recovery targets."""
+        seq, targets = batch["seq"], batch["targets"]   # targets 0 = unmasked
+        h = self.encode(p, seq, rng=rng)
+        logits = self._mask_special(self.emb.logits(p["item_emb"], h))
+        valid = targets > 0
+        ce = _xent(logits, targets)
+        loss = jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1)
+        return loss, {"loss": loss}
+
+    def _mask_special(self, logits):
+        """Never rank pad / [MASK] rows."""
+        return logits.at[..., 0].set(NEG_INF).at[..., -1].set(NEG_INF)
+
+    # ------------------------------------------------------------ serve
+    def score_last(self, p, seq):
+        """Rank the full catalogue from the last position: [B, n_rows]."""
+        h = self.encode(p, seq)
+        return self._mask_special(self.emb.logits(p["item_emb"], h[:, -1]))
+
+
+def _xent(logits, labels):
+    lse = jax.nn.logsumexp(logits, -1)
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                                 -1)[..., 0]
+    return lse - picked
+
+
+# --------------------------------------------------- bert4rec masking
+
+def mask_batch(rng, seq, mask_prob: float, mask_id: int):
+    """Cloze-mask a batch for BERT4Rec: returns (masked_seq, targets)."""
+    r = jax.random.uniform(rng, seq.shape)
+    is_item = seq > 0
+    do_mask = (r < mask_prob) & is_item
+    # always predict the final item too (paper evaluates next-item)
+    masked = jnp.where(do_mask, mask_id, seq)
+    targets = jnp.where(do_mask, seq, 0)
+    return masked, targets

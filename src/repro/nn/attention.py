@@ -1,0 +1,170 @@
+"""GQA attention with RoPE, sliding windows, qk-norm and a KV cache.
+
+Covers every assigned LM arch: MHA (kv==heads), GQA (kv<heads), qk-norm
+(qwen3), sliding-window (mixtral).  Softmax always in fp32.
+
+Shapes: x [B, S, d]; q [B, S, H, Dh]; k/v [B, S, Hkv, Dh].
+Decode: one new token against a cache [B, C, Hkv, Dh] (C = cache length;
+for sliding-window archs the cache is a rolling buffer of the window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+from repro.nn.layers import apply_rope, rope_angles, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    causal: bool = True
+    window: Optional[int] = None          # sliding-window size (None=full)
+    rope: bool = True
+    rope_theta: float = 10000.0
+    # flash-style query blocking: caps the materialised score tile at
+    # [B, H, q_chunk, S] instead of [B, H, S, S] (None = unblocked).
+    q_chunk: Optional[int] = None
+
+
+def attention_init(kg: KeyGen, cfg: AttnConfig, dtype=jnp.float32):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": P(nn.lecun_normal(kg(), (d, H, Dh), dtype, in_axis=0,
+                                out_axis=2), ("embed", "heads", "head_dim")),
+        "wk": P(nn.lecun_normal(kg(), (d, Hkv, Dh), dtype, in_axis=0,
+                                out_axis=2), ("embed", "kv_heads", "head_dim")),
+        "wv": P(nn.lecun_normal(kg(), (d, Hkv, Dh), dtype, in_axis=0,
+                                out_axis=2), ("embed", "kv_heads", "head_dim")),
+        "wo": P(nn.lecun_normal(kg(), (H, Dh, d), dtype, in_axis=1,
+                                out_axis=2), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(Dh, dtype, axis_name="head_dim")
+        p["k_norm"] = rmsnorm_init(Dh, dtype, axis_name="head_dim")
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].value.astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].value.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].value.astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.rope:
+        sin, cos = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _mask_bias(cfg: AttnConfig, q_pos, kv_pos, pad_mask=None):
+    """[B?, Sq, Skv] additive bias from causality/window/padding."""
+    m = jnp.ones(q_pos.shape[-1:] + kv_pos.shape[-1:], bool)
+    diff = q_pos[..., :, None] - kv_pos[..., None, :]
+    if cfg.causal:
+        m = m & (diff >= 0)
+    if cfg.window is not None:
+        m = m & (diff < cfg.window)
+    bias = jnp.where(m, 0.0, NEG_INF)
+    if pad_mask is not None:                       # [B, Skv] True=valid
+        bias = bias + jnp.where(pad_mask, 0.0, NEG_INF)[..., None, :]
+    return bias
+
+
+def _sdpa(q, k, v, bias):
+    """q [B,Sq,H,Dh], k/v [B,Skv,Hkv,Dh]; GQA via head grouping."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    while bias.ndim < scores.ndim:                 # broadcast to [B,H,G,Q,K]
+        bias = bias[..., None, :, :] if bias.ndim >= 2 else bias
+    scores = scores + bias
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def attention(p, cfg: AttnConfig, x, *, positions=None, pad_mask=None):
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    qc = cfg.q_chunk
+    if qc and S > qc and S % qc == 0 and pad_mask is None \
+            and positions.shape[0] == 1:
+        # flash-style query blocking: scan over q tiles so the score
+        # buffer is [B, H, qc, S] instead of [B, H, S, S].
+        kv_pos = positions[0]
+
+        def one_block(args):
+            qb, qpos = args                       # [B, qc, H, Dh], [qc]
+            bias = _mask_bias(cfg, qpos[None], kv_pos[None])
+            return _sdpa(qb, k, v, bias[:, None, None])
+
+        qs = q.reshape(B, S // qc, qc, cfg.n_heads, cfg.head_dim)
+        qs = jnp.moveaxis(qs, 1, 0)               # [nb, B, qc, H, Dh]
+        pos_blocks = kv_pos.reshape(S // qc, qc)
+        out = jax.lax.map(one_block, (qs, pos_blocks))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, cfg.n_heads,
+                                              cfg.head_dim)
+    else:
+        bias = _mask_bias(cfg, positions, positions, pad_mask)
+        if bias.ndim == 3:
+            bias = bias[:, None, None]             # [B,1,1,Sq,Skv]
+        out = _sdpa(q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].value.astype(x.dtype))
+
+
+# ------------------------------------------------------------- decoding
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Cache for one layer. For sliding-window archs pass
+    max_len = min(seq_len, window): the cache is a rolling ring buffer."""
+    C = max_len if cfg.window is None else min(max_len, cfg.window)
+    z = jnp.zeros((batch, C, cfg.n_kv, cfg.head_dim), dtype)
+    return {"k": z, "v": z,
+            "pos": jnp.zeros((), jnp.int32)}       # absolute next position
+
+
+def decode_step(p, cfg: AttnConfig, x, cache):
+    """x [B, 1, d]; returns (out [B, 1, d], new_cache)."""
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    slot = jnp.mod(pos, C)                          # ring-buffer slot
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # absolute position held in each ring slot
+    slot_ids = jnp.arange(C, dtype=jnp.int32)
+    wrapped = pos - jnp.mod(pos - slot_ids, C)      # <= pos, valid if >= 0
+    kv_pos = wrapped
+    valid = kv_pos >= 0
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, None, :]
+    bias = bias + _mask_bias(cfg, positions[:, :, None][..., 0], kv_pos)
+    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                bias[:, None, None])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value.astype(x.dtype))
+    return out, {"k": ck, "v": cv, "pos": pos + 1}

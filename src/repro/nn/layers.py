@@ -1,0 +1,139 @@
+"""Core layers: linear, norms, RoPE, MLPs. Pure-JAX, P-param based."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+
+
+# ------------------------------------------------------------- linear
+
+def linear_init(kg: KeyGen, d_in: int, d_out: int, *,
+                axes=("embed", "mlp"), bias: bool = True,
+                init=nn.lecun_normal, dtype=jnp.float32):
+    p = {"w": P(init(kg(), (d_in, d_out), dtype), axes)}
+    if bias:
+        p["b"] = P(jnp.zeros((d_out,), dtype), (axes[1],))
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].value.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].value.astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------- MLP stacks
+
+def mlp_init(kg: KeyGen, dims, *, axes=("embed", "mlp"), bias=True,
+             dtype=jnp.float32):
+    """Plain MLP tower (recsys bot/top MLPs): dims = [in, h1, ..., out]."""
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        ax = (axes[0] if i == 0 else axes[1], axes[1])
+        layers.append(linear_init(kg, a, b, axes=ax, bias=bias, dtype=dtype))
+    return {"layers": layers}
+
+
+def mlp(p, x, *, act=jax.nn.relu, final_act=False):
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = linear(lp, x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# --------------------------------------------------------------- norms
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": P(jnp.ones((d,), dtype), ("embed",)),
+            "bias": P(jnp.zeros((d,), dtype), ("embed",))}
+
+
+def layernorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].value + p["bias"].value
+    return y.astype(dt)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32, axis_name: str = "embed"):
+    return {"scale": P(jnp.ones((d,), dtype), (axis_name,))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), -1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * p["scale"].value
+    return y.astype(dt)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "layernorm":
+        return layernorm_init(d), layernorm
+    if kind == "rmsnorm":
+        return rmsnorm_init(d), rmsnorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """positions [*, S] int -> (sin, cos) [*, S, head_dim/2] fp32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, D]; sin/cos broadcastable [..., S, 1, D/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ gated MLP
+
+def gated_mlp_init(kg: KeyGen, d_model: int, d_ff: int, dtype=jnp.float32):
+    """SwiGLU (LLaMA/Mixtral/Qwen-style) FFN."""
+    return {
+        "wi_gate": P(nn.lecun_normal(kg(), (d_model, d_ff), dtype),
+                     ("embed", "mlp")),
+        "wi_up": P(nn.lecun_normal(kg(), (d_model, d_ff), dtype),
+                   ("embed", "mlp")),
+        "wo": P(nn.lecun_normal(kg(), (d_ff, d_model), dtype),
+                ("mlp", "embed")),
+    }
+
+
+def gated_mlp(p, x, act=jax.nn.silu):
+    dt = x.dtype
+    g = act(x @ p["wi_gate"].value.astype(dt))
+    u = x @ p["wi_up"].value.astype(dt)
+    return (g * u) @ p["wo"].value.astype(dt)
+
+
+def dense_mlp_init(kg: KeyGen, d_model: int, d_ff: int, dtype=jnp.float32):
+    """2-layer GELU FFN (SASRec/BERT4Rec-style)."""
+    return {
+        "wi": linear_init(kg, d_model, d_ff, axes=("embed", "mlp"),
+                          dtype=dtype),
+        "wo": linear_init(kg, d_ff, d_model, axes=("mlp", "embed"),
+                          dtype=dtype),
+    }
+
+
+def dense_mlp(p, x, act=jax.nn.gelu):
+    return linear(p["wo"], act(linear(p["wi"], x)))

@@ -1,0 +1,159 @@
+"""Minimal pure-JAX parameter system with logical sharding axes.
+
+No flax/optax in this environment; the substrate is self-contained.
+
+Parameters live in nested dicts whose leaves are :class:`P` — an array
+plus a tuple of *logical axis names* (one per array dim).  The logical
+names are resolved to physical mesh axes by ``repro.dist.rules`` at jit
+boundary; model code never mentions mesh axes directly.
+
+Conventions for logical axis names (see repro/dist/rules.py):
+  "batch", "seq", "embed", "mlp", "heads", "kv_heads", "head_dim",
+  "vocab", "expert", "layers", "table", "code_split", "centroid",
+  "nodes", "edges", "stacked" (scan-stacked leading dim), None (replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class P:
+    """A parameter leaf: array value + logical axis names (len == ndim)."""
+
+    value: Array
+    axes: tuple = ()
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def is_param(x) -> bool:
+    return isinstance(x, P)
+
+
+def values(tree: PyTree) -> PyTree:
+    """Strip axis metadata -> plain array pytree (what jit/opt sees)."""
+    return jax.tree.map(lambda p: p.value if is_param(p) else p, tree,
+                        is_leaf=is_param)
+
+
+def axes_tree(tree: PyTree) -> PyTree:
+    """Matching pytree of logical-axis tuples."""
+    return jax.tree.map(lambda p: p.axes if is_param(p) else None, tree,
+                        is_leaf=is_param)
+
+
+def with_values(meta_tree: PyTree, value_tree: PyTree) -> PyTree:
+    """Re-attach axis metadata from ``meta_tree`` onto plain arrays."""
+    return jax.tree.map(
+        lambda p, v: P(v, p.axes) if is_param(p) else v,
+        meta_tree, value_tree, is_leaf=is_param)
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(
+        tree, is_leaf=is_param) if is_param(p) or hasattr(p, "shape"))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) * p.dtype.itemsize
+               for p in jax.tree.leaves(values(tree)))
+
+
+# ---------------------------------------------------------------- inits
+
+def _fan(shape, in_axis=-2, out_axis=-1):
+    receptive = int(np.prod(shape)) / (shape[in_axis] * shape[out_axis]) \
+        if len(shape) > 1 else 1.0
+    fan_in = shape[in_axis] * receptive if len(shape) > 1 else shape[0]
+    fan_out = shape[out_axis] * receptive if len(shape) > 1 else shape[0]
+    return fan_in, fan_out
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, _ = _fan(shape, in_axis, out_axis)
+    std = math.sqrt(1.0 / max(1.0, fan_in))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def glorot_normal(key, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, fan_out = _fan(shape, in_axis, out_axis)
+    std = math.sqrt(2.0 / max(1.0, fan_in + fan_out))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def normal(stddev=0.02):
+    def init(key, shape, dtype=jnp.float32, **_):
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+    return init
+
+
+def zeros(key, shape, dtype=jnp.float32, **_):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32, **_):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Splittable key dispenser; keeps init code linear."""
+
+    def __init__(self, key_or_seed):
+        if isinstance(key_or_seed, int):
+            key_or_seed = jax.random.PRNGKey(key_or_seed)
+        self._key = key_or_seed
+
+    def __call__(self) -> Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def stack_params(trees: list) -> PyTree:
+    """Stack per-layer param trees along a new leading 'layers' axis.
+
+    Used for scan-over-layers: params become [L, ...] with logical axis
+    "layers" prepended (sharded None — layers are never split).
+    """
+    def _stack(*leaves):
+        if is_param(leaves[0]):
+            return P(jnp.stack([l.value for l in leaves]),
+                     ("layers",) + leaves[0].axes)
+        return jnp.stack(leaves)
+    return jax.tree.map(_stack, *trees, is_leaf=is_param)
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    """Cast floating-point leaves (used for bf16 compute policy)."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, tree)

@@ -1,0 +1,62 @@
+"""GRU / AUGRU cells and scanned sequence application.
+
+Used by the GRU4Rec paper backbone and DIEN's interest-evolution layer
+(AUGRU = GRU with attentional update gate, arXiv:1809.03672).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.nn.module import P, KeyGen
+
+
+def gru_init(kg: KeyGen, d_in: int, d_h: int, dtype=jnp.float32):
+    return {
+        "wx": P(nn.glorot_normal(kg(), (d_in, 3 * d_h), dtype),
+                ("embed", "mlp")),
+        "wh": P(nn.glorot_normal(kg(), (d_h, 3 * d_h), dtype),
+                ("mlp", "mlp")),
+        "b": P(jnp.zeros((3 * d_h,), dtype), ("mlp",)),
+    }
+
+
+def gru_cell(p, h, x, a=None):
+    """One step. h [B, Dh], x [B, Din], a optional attention score [B]."""
+    d_h = h.shape[-1]
+    gx = x @ p["wx"].value.astype(x.dtype) + p["b"].value.astype(x.dtype)
+    gh = h @ p["wh"].value.astype(x.dtype)
+    xz, xr, xn = jnp.split(gx, 3, -1)
+    hz, hr, hn = jnp.split(gh, 3, -1)
+    z = jax.nn.sigmoid(xz + hz)
+    r = jax.nn.sigmoid(xr + hr)
+    n = jnp.tanh(xn + r * hn)
+    if a is not None:                               # AUGRU
+        z = a[:, None] * z
+    return (1.0 - z) * h + z * n
+
+
+def gru_scan(p, xs, h0=None, attn=None, *, reverse=False):
+    """xs [B, S, Din] -> (hs [B, S, Dh], h_last [B, Dh]).
+
+    attn: optional [B, S] attention scores (AUGRU when given).
+    """
+    B, S, _ = xs.shape
+    d_h = p["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, d_h), xs.dtype)
+
+    if attn is None:
+        def step(h, x):
+            h = gru_cell(p, h, x)
+            return h, h
+        xs_t = jnp.moveaxis(xs, 1, 0)
+    else:
+        def step(h, xa):
+            h = gru_cell(p, h, xa[0], xa[1])
+            return h, h
+        xs_t = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(attn, 1, 0))
+
+    h_last, hs = jax.lax.scan(step, h0, xs_t, reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1), h_last

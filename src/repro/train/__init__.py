@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, metrics, loops."""
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates  # noqa: F401

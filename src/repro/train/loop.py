@@ -1,0 +1,228 @@
+"""Training loop: jit'd step, microbatching, early stopping, checkpoints,
+preemption handling, step-time watchdog (straggler logging).
+
+Works single-host (CPU validation runs) and under a mesh: pass ``mesh``
+and the loop resolves parameter/optimizer shardings from the logical
+axis rules, jits with those in/out shardings, and constrains batches to
+the data axes.  This same class is what launch/train.py drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import dist
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.nn import module as nn
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 1000
+    batch_size: int = 64
+    log_every: int = 50
+    eval_every: int = 200
+    ckpt_every: int = 200
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    early_stop_patience: int = 0       # 0 = off; in eval rounds
+    microbatches: int = 1              # gradient accumulation
+    watchdog_factor: float = 3.0       # flag steps slower than f * median
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: OptConfig, train_cfg: TrainConfig,
+                 data_fn: Callable[[int], dict],
+                 eval_fn: Optional[Callable[[Any], dict]] = None,
+                 mesh=None, rules=None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.cfg = train_cfg
+        self.data_fn = data_fn
+        self.eval_fn = eval_fn
+        self.mesh = mesh
+        self.rules = rules
+        self._preempted = False
+        self._step_times: list = []
+        self.history: list = []
+
+    # ----------------------------------------------------------- setup
+    def _install_sigterm(self):
+        def _handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, _handler)
+        except ValueError:
+            pass                                   # non-main thread
+
+    def _build_step(self, params_meta):
+        model, opt_cfg = self.model, self.opt_cfg
+        nmicro = self.cfg.microbatches
+
+        def loss_fn(values, batch, rng):
+            params = nn.with_values(params_meta, values)
+            loss, mets = model.train_loss(params, batch, rng)
+            return loss, mets
+
+        grad_fn = jax.grad(loss_fn, has_aux=True, allow_int=True)
+
+        def train_step(values, opt_state, batch, rng):
+            if nmicro > 1:
+                def micro(i, acc):
+                    g_acc, loss_acc = acc
+                    mb = jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            x, i * (x.shape[0] // nmicro),
+                            x.shape[0] // nmicro), batch)
+                    g, mb_mets = grad_fn(values, mb, rng)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + jnp.asarray(b, a.dtype)
+                        if jnp.issubdtype(jnp.asarray(a).dtype,
+                                          jnp.floating) and a.size
+                        else a, g_acc, g)
+                    return (g_acc, loss_acc + mb_mets["loss"] / nmicro)
+                zeros = jax.tree.map(
+                    lambda v: jnp.zeros(v.shape, jnp.float32)
+                    if jnp.issubdtype(v.dtype, jnp.floating)
+                    else jnp.zeros((0,)), values)
+                grads, loss = jax.lax.fori_loop(
+                    0, nmicro, micro, (zeros, jnp.zeros((), jnp.float32)))
+                grads = jax.tree.map(
+                    lambda g: g / nmicro
+                    if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating)
+                    and g.size else g, grads)
+                mets = {"loss": loss}
+            else:
+                grads, mets = grad_fn(values, batch, rng)
+            new_values, new_state, stats = apply_updates(
+                opt_cfg, opt_state, values, grads)
+            mets = dict(mets)
+            mets.update(stats)
+            return new_values, new_state, mets
+
+        return train_step
+
+    # ------------------------------------------------------------- run
+    def run(self, rng=None, resume: bool = True):
+        cfg = self.cfg
+        self._install_sigterm()
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        params_meta = self.model.init_params(rng)
+        values = nn.values(params_meta)
+        opt_state = init_opt_state(values)
+        start_step = 0
+
+        ckpt = None
+        if cfg.ckpt_dir:
+            ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+            if resume and latest_step(cfg.ckpt_dir) is not None:
+                state = {"values": values, "opt": opt_state}
+                shardings = None
+                if self.mesh is not None:
+                    shardings = {
+                        "values": dist.params_shardings(
+                            params_meta, self.mesh, self.rules),
+                        "opt": _opt_shardings(opt_state, params_meta,
+                                              self.mesh, self.rules),
+                    }
+                state, start_step = restore_checkpoint(
+                    cfg.ckpt_dir, state, shardings=shardings)
+                values, opt_state = state["values"], state["opt"]
+
+        train_step = self._build_step(params_meta)
+        if self.mesh is not None:
+            shardings = dist.params_shardings(params_meta, self.mesh,
+                                              self.rules)
+            opt_sh = _opt_shardings(opt_state, params_meta, self.mesh,
+                                    self.rules)
+            train_step = jax.jit(
+                train_step, donate_argnums=(0, 1),
+                in_shardings=(shardings, opt_sh, None, None),
+                out_shardings=(shardings, opt_sh, None))
+        else:
+            train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        best_metric, stale = -np.inf, 0
+        ctx = (dist.use_mesh_rules(self.mesh, self.rules)
+               if self.mesh is not None else _nullctx())
+        with ctx:
+            for step in range(start_step, cfg.steps):
+                t0 = time.perf_counter()
+                batch = jax.tree.map(jnp.asarray, self.data_fn(step))
+                srng = jax.random.fold_in(rng, step)
+                values, opt_state, mets = train_step(
+                    values, opt_state, batch, srng)
+                dt = time.perf_counter() - t0
+                self._watchdog(step, dt)
+                if step % cfg.log_every == 0 or step == cfg.steps - 1:
+                    mets = {k: float(v) for k, v in mets.items()}
+                    self.history.append({"step": step, **mets,
+                                         "sec": dt})
+                if ckpt and cfg.ckpt_every and \
+                        (step + 1) % cfg.ckpt_every == 0:
+                    ckpt.save({"values": values, "opt": opt_state},
+                              step + 1)
+                if self._preempted:
+                    if ckpt:
+                        ckpt.save({"values": values, "opt": opt_state},
+                                  step + 1)
+                        ckpt.wait()
+                    break
+                if self.eval_fn and cfg.eval_every and \
+                        (step + 1) % cfg.eval_every == 0:
+                    params = nn.with_values(params_meta, values)
+                    ev = self.eval_fn(params)
+                    self.history.append({"step": step, **{
+                        f"eval_{k}": float(v) for k, v in ev.items()}})
+                    metric = float(next(iter(ev.values())))
+                    if cfg.early_stop_patience:
+                        if metric > best_metric + 1e-6:
+                            best_metric, stale = metric, 0
+                        else:
+                            stale += 1
+                            if stale >= cfg.early_stop_patience:
+                                break
+        if ckpt:
+            ckpt.save({"values": values, "opt": opt_state}, cfg.steps)
+            ckpt.wait()
+        return nn.with_values(params_meta, values), self.history
+
+    def _watchdog(self, step, dt):
+        self._step_times.append(dt)
+        if len(self._step_times) >= 20:
+            med = float(np.median(self._step_times[-100:]))
+            if dt > self.cfg.watchdog_factor * med and step > 20:
+                self.history.append(
+                    {"step": step, "straggler_sec": dt, "median_sec": med})
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def _opt_shardings(opt_state, params_meta, mesh, rules):
+    from jax.sharding import NamedSharding, PartitionSpec
+    psh = dist.params_shardings(params_meta, mesh, rules)
+
+    def _match(slot_tree):
+        return jax.tree.map(
+            lambda s, p: p if s.ndim > 0 and s.size > 0
+            else NamedSharding(mesh, PartitionSpec()),
+            slot_tree, psh)
+    return {
+        "m": _match(opt_state["m"]),
+        "v": _match(opt_state["v"]),
+        "step": NamedSharding(mesh, PartitionSpec()),
+    }

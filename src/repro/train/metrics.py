@@ -1,0 +1,23 @@
+"""Ranking metrics — unsampled, per the paper's evaluation protocol
+(Krichene & Rendle caution against sampled metrics; the paper follows)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_of(scores, target):
+    """scores [B, N], target [B] -> 1-based rank of target item."""
+    t = jnp.take_along_axis(scores, target[:, None].astype(jnp.int32),
+                            -1)                     # [B, 1]
+    return 1 + jnp.sum(scores > t, axis=-1)
+
+
+def ndcg_at_k(scores, target, k: int = 10):
+    r = rank_of(scores, target)
+    gain = jnp.where(r <= k, 1.0 / jnp.log2(1.0 + r), 0.0)
+    return gain                                     # [B]; mean outside
+
+
+def hr_at_k(scores, target, k: int = 10):
+    return (rank_of(scores, target) <= k).astype(jnp.float32)

@@ -1,0 +1,118 @@
+"""Per-arch reduced-config smoke tests: every assigned architecture (and
+its JPQ variant where defined) instantiates a small model, runs one
+forward/train step on CPU, and asserts output shapes + no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — repro/launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_bundle
+from repro.configs.registry import JPQ_VARIANTS
+from repro.nn import module as nn
+
+
+@pytest.mark.parametrize("arch", ARCHS + JPQ_VARIANTS)
+def test_smoke_train_step(arch):
+    bundle = get_bundle(arch)
+    model, batch, rng = bundle.make_smoke()
+    p = model.init_params(rng)
+    loss, mets = model.train_loss(p, batch)
+    assert np.isfinite(float(loss)), (arch, mets)
+    # one optimizer step moves the loss
+    from repro.train.optimizer import OptConfig, apply_updates, \
+        init_opt_state
+    values = nn.values(p)
+    state = init_opt_state(values)
+
+    def loss_fn(v):
+        return model.train_loss(nn.with_values(p, v), batch)[0]
+
+    g = jax.grad(loss_fn, allow_int=True)(values)
+    new_values, state, stats = apply_updates(
+        OptConfig(lr=1e-2), state, values, g)
+    assert float(stats["grad_norm"]) > 0
+    new_loss = float(loss_fn(new_values))
+    assert np.isfinite(new_loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cell_grid_is_complete(arch):
+    """Every assigned arch exposes its full shape set (40 cells total)."""
+    bundle = get_bundle(arch)
+    if bundle.family == "lm":
+        expected = {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    elif bundle.family == "gnn":
+        expected = {"full_graph_sm", "minibatch_lg", "ogb_products",
+                    "molecule"}
+    else:
+        expected = {"train_batch", "serve_p99", "serve_bulk",
+                    "retrieval_cand"}
+    assert set(bundle.cells) == expected
+
+
+def test_grid_totals_40_cells():
+    total = sum(len(get_bundle(a).cells) for a in ARCHS)
+    assert total == 40
+
+
+def test_long_500k_skips_documented():
+    skipped = [a for a in ARCHS
+               if get_bundle(a).family == "lm"
+               and get_bundle(a).cells["long_500k"].skip]
+    assert sorted(skipped) == ["olmoe-1b-7b", "qwen3-14b", "stablelm-1.6b",
+                               "stablelm-12b"]
+    assert get_bundle("mixtral-8x7b").cells["long_500k"].skip is None
+
+
+@pytest.mark.parametrize("arch", ["two-tower-retrieval-jpq", "dien-jpq"])
+def test_recsys_serve_paths(arch):
+    bundle = get_bundle(arch)
+    model, batch, rng = bundle.make_smoke()
+    p = model.init_params(rng)
+    if arch.startswith("two-tower"):
+        vals, idx = model.retrieve(p, batch, top_k=5)
+        assert idx.shape == (batch["user_hist"].shape[0], 5)
+        assert np.isfinite(np.asarray(vals)).all()
+    else:
+        out = model.serve(p, batch)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_dlrm_candidate_scoring_matches_serve():
+    bundle = get_bundle("dlrm-rm2")
+    model, batch, rng = bundle.make_smoke()
+    p = model.init_params(rng)
+    dense = batch["dense"][:1]
+    sparse = batch["sparse"][:1]
+    cands = jnp.arange(8, dtype=jnp.int32)
+    s = model.score_candidates(
+        p, {"dense": dense, "sparse_rest": sparse[:, 1:],
+            "candidates": cands}, chunk=4)
+    # candidate c's score == serve() on a batch with field0 = c
+    full = model.scores(
+        p, jnp.broadcast_to(dense, (8, dense.shape[1])),
+        jnp.concatenate([cands[:, None],
+                         jnp.broadcast_to(sparse[:, 1:], (8, 3))], 1))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fm_candidate_scoring_matches_direct():
+    bundle = get_bundle("fm")
+    model, batch, rng = bundle.make_smoke()
+    p = model.init_params(rng)
+    sparse = batch["sparse"][:2]
+    v0 = model.cfg.vocabs()[0]
+    s = model.candidate_scores(p, {"sparse_rest": sparse[:, 1:]})
+    # check against direct scoring for a few candidates
+    for c in [0, 3, v0 - 1]:
+        direct = model.scores(
+            p, jnp.concatenate(
+                [jnp.full((2, 1), c, jnp.int32), sparse[:, 1:]], 1))
+        np.testing.assert_allclose(np.asarray(s[:, c]),
+                                   np.asarray(direct), rtol=1e-4,
+                                   atol=1e-4)

@@ -1,0 +1,113 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+interpret mode on CPU (TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.jpq_scores.ops import jpq_scores
+from repro.kernels.jpq_scores.ref import jpq_scores_ref
+
+settings.register_profile("k", max_examples=15, deadline=None)
+settings.load_profile("k")
+
+
+class TestJPQScoresKernel:
+    @pytest.mark.parametrize("m,b,dk,N,B", [
+        (1, 2, 8, 7, 3),
+        (2, 16, 4, 100, 1),
+        (4, 256, 2, 513, 9),
+        (8, 32, 16, 1000, 17),
+        (8, 256, 64, 2048, 32),      # production-ish tile
+    ])
+    def test_matches_ref(self, m, b, dk, N, B):
+        k = jax.random.PRNGKey(0)
+        cent = jax.random.normal(jax.random.fold_in(k, 1), (m, b, dk))
+        codes = jax.random.randint(jax.random.fold_in(k, 2), (N, m), 0, b,
+                                   jnp.int32).astype(jnp.uint8)
+        h = jax.random.normal(jax.random.fold_in(k, 3), (B, m * dk))
+        out = jpq_scores(h, cent, codes)
+        ref = jpq_scores_ref(h, cent, codes)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k = jax.random.PRNGKey(1)
+        cent = jax.random.normal(jax.random.fold_in(k, 1),
+                                 (4, 16, 8)).astype(dtype)
+        codes = jax.random.randint(jax.random.fold_in(k, 2), (64, 4), 0, 16)
+        h = jax.random.normal(jax.random.fold_in(k, 3), (5, 32)).astype(dtype)
+        out = jpq_scores(h, cent, codes)
+        ref = jpq_scores_ref(h, cent, codes)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol)
+        assert out.dtype == jnp.float32          # fp32 accumulation
+
+    def test_leading_batch_dims(self):
+        k = jax.random.PRNGKey(2)
+        cent = jax.random.normal(k, (2, 8, 4))
+        codes = jax.random.randint(k, (30, 2), 0, 8)
+        h = jax.random.normal(k, (3, 5, 8))
+        out = jpq_scores(h, cent, codes)
+        assert out.shape == (3, 5, 30)
+
+    @given(st.integers(1, 300), st.sampled_from([1, 2, 4]),
+           st.sampled_from([2, 16]))
+    def test_property_sweep(self, N, m, b):
+        k = jax.random.PRNGKey(N * 7 + m)
+        cent = jax.random.normal(k, (m, b, 4))
+        codes = jax.random.randint(k, (N, m), 0, b)
+        h = jax.random.normal(k, (2, 4 * m))
+        np.testing.assert_allclose(
+            np.asarray(jpq_scores(h, cent, codes)),
+            np.asarray(jpq_scores_ref(h, cent, codes)),
+            rtol=1e-4, atol=1e-4)
+
+
+class TestEmbeddingBagKernel:
+    @pytest.mark.parametrize("V,d,nb,L", [
+        (10, 4, 1, 1),
+        (100, 16, 7, 5),
+        (64, 128, 16, 8),
+        (1000, 32, 33, 11),
+    ])
+    def test_matches_ref(self, V, d, nb, L):
+        k = jax.random.PRNGKey(0)
+        tab = jax.random.normal(jax.random.fold_in(k, 1), (V, d))
+        ids = jax.random.randint(jax.random.fold_in(k, 2), (nb, L), 0, V)
+        w = jax.random.uniform(jax.random.fold_in(k, 3), (nb, L))
+        np.testing.assert_allclose(
+            np.asarray(embedding_bag(tab, ids, w)),
+            np.asarray(embedding_bag_ref(tab, ids, w)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_mean_combiner(self):
+        tab = jnp.eye(4)
+        ids = jnp.array([[0, 1], [2, 2]])
+        out = embedding_bag(tab, ids, combiner="mean")
+        np.testing.assert_allclose(
+            np.asarray(out),
+            [[0.5, 0.5, 0, 0], [0, 0, 1.0, 0]], atol=1e-6)
+
+    def test_padding_with_zero_weight(self):
+        tab = jax.random.normal(jax.random.PRNGKey(0), (10, 8))
+        ids = jnp.array([[3, 0], [5, 7]])       # slot (0,1) is padding
+        w = jnp.array([[1.0, 0.0], [1.0, 1.0]])
+        out = embedding_bag(tab, ids, w)
+        np.testing.assert_allclose(np.asarray(out[0]),
+                                   np.asarray(tab[3]), rtol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        tab = jax.random.normal(jax.random.PRNGKey(1), (20, 8)).astype(dtype)
+        ids = jax.random.randint(jax.random.PRNGKey(2), (4, 3), 0, 20)
+        w = jnp.ones((4, 3), dtype)
+        tol = 1e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(embedding_bag(tab, ids, w)),
+            np.asarray(embedding_bag_ref(tab, ids, w)), rtol=tol, atol=tol)

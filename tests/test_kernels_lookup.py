@@ -1,0 +1,65 @@
+"""jpq_lookup Pallas kernel: sweep vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.jpq_lookup.ops import jpq_lookup
+from repro.kernels.jpq_lookup.ref import jpq_lookup_ref
+
+settings.register_profile("kl", max_examples=10, deadline=None)
+settings.load_profile("kl")
+
+
+@pytest.mark.parametrize("N,m,b,dk,B", [
+    (10, 1, 2, 1, 1),
+    (50, 4, 8, 4, 7),
+    (200, 8, 256, 8, 16),
+    (1000, 8, 32, 64, 33),
+])
+def test_matches_ref(N, m, b, dk, B):
+    k = jax.random.PRNGKey(0)
+    codes = jax.random.randint(jax.random.fold_in(k, 1), (N, m), 0, b,
+                               jnp.int32)
+    cent = jax.random.normal(jax.random.fold_in(k, 2), (m, b, dk))
+    ids = jax.random.randint(jax.random.fold_in(k, 3), (B,), 0, N)
+    np.testing.assert_allclose(
+        np.asarray(jpq_lookup(ids, codes, cent)),
+        np.asarray(jpq_lookup_ref(ids, codes, cent)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_matches_core_jpq_lookup():
+    """Kernel output == repro.core.jpq.lookup (the model path)."""
+    from repro.core import jpq
+    from repro.nn.module import KeyGen
+    p = jpq.init(KeyGen(0), 100, 32, 4, 16)
+    ids = jnp.array([0, 5, 99, 17])
+    np.testing.assert_allclose(
+        np.asarray(jpq_lookup(ids, p["codes"].value,
+                              p["centroids"].value)),
+        np.asarray(jpq.lookup(p, ids)), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 40), st.sampled_from([1, 2, 4]))
+def test_property_sweep(B, m):
+    k = jax.random.PRNGKey(B * 13 + m)
+    codes = jax.random.randint(k, (60, m), 0, 8)
+    cent = jax.random.normal(k, (m, 8, 4))
+    ids = jax.random.randint(k, (B,), 0, 60)
+    np.testing.assert_allclose(
+        np.asarray(jpq_lookup(ids, codes, cent)),
+        np.asarray(jpq_lookup_ref(ids, codes, cent)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_bfloat16_centroids():
+    k = jax.random.PRNGKey(1)
+    codes = jax.random.randint(k, (30, 2), 0, 4)
+    cent = jax.random.normal(k, (2, 4, 8)).astype(jnp.bfloat16)
+    ids = jnp.arange(6)
+    np.testing.assert_allclose(
+        np.asarray(jpq_lookup(ids, codes, cent)),
+        np.asarray(jpq_lookup_ref(ids, codes, cent)),
+        rtol=2e-2, atol=2e-2)

@@ -1,0 +1,225 @@
+"""Model behaviour tests: backbones, LM equivalences, MACE equivariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EmbeddingConfig
+from repro.models.equivariant import (_SH_POLYS, _pint, _pmul, gaunt,
+                                      spherical_harmonics)
+from repro.models.lm import LMConfig, TransformerLM
+from repro.models.mace import MACE, MACEConfig
+from repro.models.sequential import SeqRecConfig, SeqRecModel, mask_batch
+from repro.nn.moe import MoEConfig
+
+
+class TestSequentialBackbones:
+    SEQ = jnp.array([[0, 0, 1, 2, 3, 4, 5, 6],
+                     [0, 0, 0, 7, 8, 9, 10, 11]], jnp.int32)
+
+    @pytest.mark.parametrize("arch", ["sasrec", "bert4rec", "gru4rec"])
+    @pytest.mark.parametrize("kind", ["full", "jpq", "qr"])
+    def test_loss_finite_all_embeddings(self, arch, kind):
+        cfg = SeqRecConfig(arch=arch, n_items=50, max_len=8, d_model=32,
+                           n_layers=1, n_heads=2, d_ff=64,
+                           embedding=EmbeddingConfig(0, 0, kind=kind,
+                                                     m=4, b=8))
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        if arch == "bert4rec":
+            ms, tg = mask_batch(jax.random.PRNGKey(1), self.SEQ, 0.4,
+                                cfg.mask_id)
+            batch = {"seq": ms, "targets": tg}
+        else:
+            batch = {"seq": self.SEQ, "labels": self.SEQ}
+        loss, _ = m.train_loss(p, batch)
+        assert np.isfinite(float(loss))
+
+    def test_sasrec_sampled_bce(self):
+        cfg = SeqRecConfig(arch="sasrec", n_items=50, max_len=8,
+                           d_model=32, n_layers=1, n_heads=2, d_ff=64,
+                           loss="sampled_bce", n_negatives=2)
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        neg = jax.random.randint(jax.random.PRNGKey(2), (2, 8, 2), 1, 51)
+        loss, _ = m.train_loss(
+            p, {"seq": self.SEQ, "labels": self.SEQ, "negatives": neg})
+        assert np.isfinite(float(loss))
+
+    def test_padding_rows_never_ranked(self):
+        cfg = SeqRecConfig(arch="sasrec", n_items=20, max_len=8,
+                           d_model=16, n_layers=1, n_heads=2, d_ff=32)
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        s = m.score_last(p, self.SEQ)
+        assert float(s[:, 0].max()) <= -1e8           # pad row
+        assert float(s[:, -1].max()) <= -1e8          # [MASK] row
+
+    def test_causality_of_sasrec_scores(self):
+        """score at last position must not change if we alter..."""
+        cfg = SeqRecConfig(arch="sasrec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1, n_heads=2, d_ff=32)
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        h1 = m.encode(p, self.SEQ)
+        # changing an early item changes later states (sanity: attention on)
+        seq2 = self.SEQ.at[:, 2].set(15)
+        h2 = m.encode(p, seq2)
+        assert not np.allclose(np.asarray(h1[:, -1]), np.asarray(h2[:, -1]))
+
+
+class TestTransformerLM:
+    def _smoke(self, **kw):
+        cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv=2, d_ff=64, vocab=101,
+                       compute_dtype="float32", **kw)
+        m = TransformerLM(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 101)
+        return cfg, m, p, toks
+
+    @pytest.mark.parametrize("kw", [
+        {}, {"qk_norm": True}, {"window": 4},
+        {"moe": MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff=64)},
+        {"scan_layers": False}, {"remat": False},
+    ])
+    def test_decode_matches_full_forward(self, kw):
+        cfg, m, p, toks = self._smoke(**kw)
+        h, _ = m.hidden_states(p, toks)
+        full = m.logits(p, h)
+        caches = m.init_caches(2, max_len=8, dtype=jnp.float32)
+        dec = jax.jit(m.decode_step)
+        outs = []
+        c = caches
+        for t in range(8):
+            lg, c = dec(p, toks[:, t:t + 1], c)
+            outs.append(lg[:, 0])
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                                   np.asarray(full), rtol=2e-3, atol=2e-3)
+
+    def test_scan_equals_python_loop(self):
+        cfg, m, p, toks = self._smoke()
+        h1, _ = m.hidden_states(p, toks)
+        m2 = TransformerLM(
+            __import__("dataclasses").replace(m.cfg, scan_layers=False))
+        # restack params into per-layer list
+        from repro.nn import module as nn
+        blocks = [jax.tree.map(
+            lambda q: nn.P(q.value[i], q.axes[1:]), p["blocks"],
+            is_leaf=nn.is_param) for i in range(2)]
+        p2 = dict(p)
+        p2["blocks"] = blocks
+        h2, _ = m2.hidden_states(p2, toks)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_jpq_vocab_embedding(self):
+        """Beyond-paper: RecJPQ on the LM vocab + tied JPQ softmax."""
+        cfg = LMConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                       n_kv=2, d_ff=64, vocab=100,
+                       compute_dtype="float32",
+                       embedding=EmbeddingConfig(0, 0, kind="jpq",
+                                                 m=4, b=16))
+        m = TransformerLM(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        assert "lm_head" not in p                    # tied through JPQ
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 100)
+        loss, _ = m.train_loss(p, {"tokens": toks, "targets": toks})
+        assert np.isfinite(float(loss))
+
+    def test_param_count_formula(self):
+        cfg, m, p, _ = self._smoke()
+        from repro.nn import module as nn
+        actual = sum(x.size for x in jax.tree.leaves(nn.values(p)))
+        est = cfg.param_count()
+        assert abs(actual - est) / est < 0.05
+
+
+class TestMACE:
+    def test_gaunt_orthonormality_exact(self):
+        for l in range(3):
+            for i, p1 in enumerate(_SH_POLYS[l]):
+                for j, p2 in enumerate(_SH_POLYS[l]):
+                    v = _pint(_pmul(p1, p2))
+                    assert abs(v - (1.0 if i == j else 0.0)) < 1e-12
+
+    def test_sh_rotation_equivariance(self):
+        rng = np.random.default_rng(1)
+        A = rng.standard_normal((3, 3))
+        Q, _ = np.linalg.qr(A)
+        if np.linalg.det(Q) < 0:
+            Q[:, 0] *= -1
+        r = rng.standard_normal((200, 3))
+        sh1 = spherical_harmonics(jnp.array(r))
+        sh2 = spherical_harmonics(jnp.array(r @ Q.T))
+        for l in (1, 2):
+            Y1, Y2 = np.asarray(sh1[l]), np.asarray(sh2[l])
+            D, *_ = np.linalg.lstsq(Y1, Y2, rcond=None)
+            assert np.abs(Y1 @ D - Y2).max() < 1e-4
+            assert np.abs(D.T @ D - np.eye(2 * l + 1)).max() < 1e-4
+
+    def _batch(self, rng, N=12, E=30):
+        pos = rng.standard_normal((N, 3)).astype(np.float32)
+        return dict(
+            positions=jnp.array(pos),
+            features=jnp.array(rng.standard_normal((N, 5)).astype(
+                np.float32)),
+            senders=jnp.array(rng.integers(0, N, E), dtype=jnp.int32),
+            receivers=jnp.array(rng.integers(0, N, E), dtype=jnp.int32),
+            edge_mask=jnp.ones(E), node_mask=jnp.ones(N),
+            graph_id=jnp.array([0] * (N // 2) + [1] * (N - N // 2),
+                               dtype=jnp.int32),
+            labels=jnp.zeros(2)), pos
+
+    def test_rotation_invariant_energy(self):
+        cfg = MACEConfig(n_layers=2, channels=8, d_feat=5, head="energy",
+                         n_graphs=2, r_cut=2.0, avg_neighbors=2.5)
+        m = MACE(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch, pos = self._batch(rng)
+        e1 = m.serve(p, batch)
+        A = rng.standard_normal((3, 3))
+        Q, _ = np.linalg.qr(A)
+        if np.linalg.det(Q) < 0:
+            Q[:, 0] *= -1
+        batch2 = dict(batch)
+        batch2["positions"] = jnp.array(pos @ Q.T.astype(np.float32))
+        e2 = m.serve(p, batch2)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_translation_invariance(self):
+        cfg = MACEConfig(n_layers=1, channels=8, d_feat=5, head="energy",
+                         n_graphs=2, r_cut=2.0)
+        m = MACE(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        batch, pos = self._batch(rng)
+        e1 = m.serve(p, batch)
+        batch2 = dict(batch)
+        batch2["positions"] = batch["positions"] + jnp.array([5.0, -2., 1.])
+        e2 = m.serve(p, batch2)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_edge_mask_zeroes_messages(self):
+        # r_cut wide enough that the masked edges carry real weight
+        cfg = MACEConfig(n_layers=1, channels=8, d_feat=5,
+                         head="node_class", n_classes=3, r_cut=6.0)
+        m = MACE(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(4)
+        batch, _ = self._batch(rng)
+        batch["labels"] = jnp.zeros(12, jnp.int32)
+        out1 = m.serve(p, batch)
+        # masked edges with wild endpoints must not change anything
+        batch2 = dict(batch)
+        batch2["edge_mask"] = batch["edge_mask"].at[:5].set(0.0)
+        out2 = m.serve(p, batch2)
+        batch3 = dict(batch2)
+        batch3["senders"] = batch2["senders"].at[:5].set(0)
+        out3 = m.serve(p, batch3)
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(out3),
+                                   atol=1e-5)
+        assert not np.allclose(np.asarray(out1), np.asarray(out2))
