@@ -1,0 +1,44 @@
+"""Version bridges for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``).  Call sites
+in this repo use the new spelling; this wrapper maps it onto whichever
+implementation the installed jax provides.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map          # jax >= 0.6
+    _CHECK_KW = "check_vma"
+except ImportError:                                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_vma})
+
+
+def install_cost_analysis_shim():
+    """``Compiled.cost_analysis()`` returned a per-program *list* of
+    dicts before jax 0.5 and a single dict after.  Normalise the
+    single-program case to the dict form that ``repro.launch.dryrun``
+    (and its tests) consume.  Multi-program lists (len > 1) are left
+    untouched so code relying on the documented pre-0.5 contract still
+    sees them."""
+    import jax
+
+    cls = jax.stages.Compiled
+    if getattr(cls, "_repro_cost_dict_shim", False):
+        return
+    orig = cls.cost_analysis
+
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list) and len(out) <= 1:
+            out = out[0] if out else {}
+        return out
+
+    cls.cost_analysis = cost_analysis
+    cls._repro_cost_dict_shim = True

@@ -1,0 +1,137 @@
+"""Data-parallel gradient exchange with payload compression.
+
+``make_dp_grad_fn`` builds the data-parallel step used when gradient
+all-reduce traffic is the bottleneck (large embedding tables over slow
+inter-pod links): each data shard computes its local gradient,
+compresses it (``bf16`` cast or per-tensor symmetric ``int8``
+quantisation), and the *decompressed* payloads are mean-reduced across
+the shards.  Compression error is carried in per-shard **error
+feedback** state (Seide et al. 2014; Karimireddy et al. 2019): the
+residual ``(g + e) - dequant(quant(g + e))`` is added back to the next
+step's gradient, so compressed training converges to the same optimum
+instead of stalling at the quantisation floor.
+
+``payload_bytes`` is the matching accounting hook for the dry-run
+roofline: bytes of *compressed* gradient payload exchanged per step and
+per shard (quantisation scales — one scalar per tensor — are excluded;
+they are noise next to the payload).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.dist import rules as _rules
+from repro.dist.compat import shard_map
+
+METHODS = ("none", "bf16", "int8")
+
+_PAYLOAD_ITEMSIZE = {"bf16": 2, "int8": 1}
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def _dp_axes(mesh):
+    axes = tuple(a for a in _rules.DATA_AXES if a in mesh.shape)
+    if not axes:                       # e.g. a pure ("model",) mesh
+        axes = (tuple(mesh.shape)[0],)
+    return axes
+
+
+def dp_shard_count(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in _dp_axes(mesh))
+
+
+def zeros_error_state(values, n_shards: int):
+    """Per-shard error-feedback state: one residual per float leaf,
+    stacked along a leading ``n_shards`` axis (sharded over the data
+    axes inside the step)."""
+    return jax.tree.map(
+        lambda v: jnp.zeros((n_shards,) + tuple(jnp.shape(v)),
+                            jnp.float32)
+        if _is_float(v) else jnp.zeros((n_shards, 0), jnp.float32),
+        values)
+
+
+def payload_bytes(values, method: str) -> int:
+    """Compressed gradient bytes exchanged per shard per step."""
+    if method not in METHODS:
+        raise ValueError(f"unknown compression method {method!r}")
+    total = 0
+    for v in jax.tree.leaves(values):
+        if not _is_float(v):
+            continue
+        n = int(math.prod(jnp.shape(v))) if jnp.shape(v) else 1
+        itemsize = _PAYLOAD_ITEMSIZE.get(
+            method, jnp.asarray(v).dtype.itemsize)
+        total += n * itemsize
+    return total
+
+
+def _compress(t, method: str):
+    """t = grad + error  ->  (dequantised payload, new error)."""
+    if method == "bf16":
+        deq = t.astype(jnp.bfloat16).astype(jnp.float32)
+    else:                                              # int8
+        scale = jnp.maximum(jnp.max(jnp.abs(t)) / 127.0, 1e-30)
+        q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+    return deq, t - deq
+
+
+def make_dp_grad_fn(loss_fn, mesh, method: str = "none"):
+    """Build ``(values, err_state, batch) -> (grads, err_state, loss)``.
+
+    ``loss_fn(values, batch) -> scalar``.  The batch's leading dim is
+    split over the mesh's data axes; returned grads/loss are the
+    across-shard means (identical semantics to an uncompressed
+    all-reduce when ``method="none"``).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown compression method {method!r}")
+    dp = _dp_axes(mesh)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    n_shards = dp_shard_count(mesh)
+    vg = jax.value_and_grad(loss_fn)
+
+    def body(values, err, batch):
+        loss, g = vg(values, batch)
+
+        def exchange(gl, el):
+            if not _is_float(gl) or not gl.size:
+                return gl, el
+            e0 = el[0]                       # local error block [1, ...]
+            t = gl.astype(jnp.float32) + e0
+            if method == "none":
+                deq, new_e = t, jnp.zeros_like(e0)
+            else:
+                deq, new_e = _compress(t, method)
+            g_sync = jax.lax.pmean(deq, dp)
+            return g_sync.astype(gl.dtype), new_e[None]
+
+        flat_g, tdef = jax.tree.flatten(g)
+        flat_e = tdef.flatten_up_to(err)
+        out = [exchange(gl, el) for gl, el in zip(flat_g, flat_e)]
+        grads = tdef.unflatten([o[0] for o in out])
+        new_err = tdef.unflatten([o[1] for o in out])
+        return grads, new_err, jax.lax.pmean(loss, dp)
+
+    def step(values, err_state, batch):
+        repl = jax.tree.map(lambda _: PartitionSpec(), values)
+        err_specs = jax.tree.map(lambda _: PartitionSpec(dp_entry),
+                                 err_state)
+        batch_specs = jax.tree.map(lambda _: PartitionSpec(dp_entry),
+                                   batch)
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(repl, err_specs, batch_specs),
+                      out_specs=(repl, err_specs, PartitionSpec()),
+                      check_vma=False)
+        return f(values, err_state, batch)
+
+    step.n_shards = n_shards
+    return jax.jit(step)

@@ -1,0 +1,85 @@
+"""Collective-traffic accounting from compiled HLO text.
+
+``collective_bytes`` tallies the result-shape bytes of every collective
+op (all-gather, all-reduce, reduce-scatter, all-to-all,
+collective-permute, collective-broadcast) in an HLO dump — the
+``collective_s`` term of the dry-run roofline in
+``repro.launch.dryrun``.  Async pairs are counted once (``-start``
+counted, ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1, "f8e5m2": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# "%name = <result types> <op-name>(..."
+_INSTR = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*(?P<op>[a-z][a-z0-9-]*)\(")
+# every "dtype[1,2,3]" inside the result type (layouts are {..}-braced
+# and therefore never match)
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(result):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            continue
+        elems = math.prod(int(d) for d in dims.split(",") if d) \
+            if dims else 1
+        total += elems * size
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Parse HLO text -> per-collective byte/count tallies.
+
+    Returns ``{"per_op_bytes": {op: bytes}, "per_op_counts": {op: n},
+    "total_bytes": int}`` with only the collective ops that actually
+    occur as keys.
+    """
+    per_bytes: Dict[str, int] = {}
+    per_counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue                     # async pair: count -start only
+        is_start = op.endswith("-start")
+        base = op[:-len("-start")] if is_start else op
+        if base not in _COLLECTIVES:
+            continue
+        result = m.group("result")
+        if is_start and result.lstrip().startswith("("):
+            # async tuple result carries the aliased operand buffer(s)
+            # too; the actual output is the last element — count only
+            # it, matching the sync-op convention
+            shapes = _SHAPE.findall(result)
+            result = "".join(f"{d}[{s}]" for d, s in shapes[-1:])
+        nbytes = _shape_bytes(result)
+        per_bytes[base] = per_bytes.get(base, 0) + nbytes
+        per_counts[base] = per_counts.get(base, 0) + 1
+    return {
+        "per_op_bytes": per_bytes,
+        "per_op_counts": per_counts,
+        "total_bytes": sum(per_bytes.values()),
+    }

@@ -1,0 +1,116 @@
+"""Logical-axis -> physical-mesh resolution.
+
+Model code annotates every array dimension with a *logical* axis name
+(see ``repro.nn.module``); this module owns the single table that maps
+those names onto physical mesh axes:
+
+  * data axes   — "batch" (and the graph analogues "nodes"/"edges")
+    shard over ``("pod", "data")``: whichever of the two axes the mesh
+    actually has, jointly (a 2x16x16 multi-pod mesh gives 32-way data
+    parallelism).
+  * width axes  — table/width dimensions ("mlp", "heads", "kv_heads",
+    "vocab", "items", "table", "centroid", "expert") shard over
+    ``"model"``.
+  * everything else ("seq", "embed", "head_dim", "code_split", ...,
+    ``None``) replicates.
+
+Resolution is *best effort*: a dimension only takes a mesh axis if its
+size is divisible by the (product of the) mesh axis size(s) — trailing
+candidate axes are dropped until it divides, falling back to full
+replication.  Each mesh axis is used by at most one dimension; on a
+conflict the first (leftmost) dimension wins.
+
+``_CTX`` holds the ambient mesh + rules installed by
+``repro.dist.use_mesh_rules``; ``repro.core.sharded`` and
+``repro.dist.constrain`` read it so model code never threads a mesh
+argument around.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec
+
+# logical axis name -> ordered candidate mesh axes
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("batch", ("pod", "data")),
+    ("nodes", ("pod", "data")),
+    ("edges", ("pod", "data")),
+    ("mlp", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("vocab", ("model",)),
+    ("items", ("model",)),
+    ("table", ("model",)),
+    ("centroid", ("model",)),
+    ("expert", ("model",)),
+)
+
+# the logical names whose mesh axes define the data-parallel degree
+DATA_AXES = ("pod", "data")
+
+
+class _Ctx(threading.local):
+    """Ambient (mesh, rules) installed by use_mesh_rules."""
+
+    def __init__(self):
+        self.mesh = None
+        self.rules = None
+
+
+_CTX = _Ctx()
+
+
+def _rule_table(rules=None) -> Mapping[str, Tuple[str, ...]]:
+    table = dict(DEFAULT_RULES)
+    if rules:
+        table.update(dict(rules))
+    return table
+
+
+def resolve_axes(logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int], mesh,
+                 rules=None) -> PartitionSpec:
+    """Resolve per-dim logical names to a PartitionSpec for ``mesh``.
+
+    ``logical_axes`` has one entry per dim of ``shape`` (``None`` =
+    replicated).  ``rules`` optionally overrides/extends the defaults
+    (mapping or pair-sequence of name -> candidate mesh axes).
+    """
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    table = _rule_table(rules)
+    mesh_shape = dict(mesh.shape)
+    used: set = set()
+    entries = []
+    for name, dim in zip(logical_axes, shape):
+        cand = list(table.get(name, ())) if name is not None else []
+        cand = [a for a in cand if a in mesh_shape and a not in used]
+        # divisibility fallback: drop trailing axes until it divides
+        while cand:
+            prod = 1
+            for a in cand:
+                prod *= mesh_shape[a]
+            if dim % prod == 0:
+                break
+            cand.pop()
+        if not cand:
+            entries.append(None)
+        else:
+            used.update(cand)
+            entries.append(tuple(cand) if len(cand) > 1 else cand[0])
+    return PartitionSpec(*entries)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules=None):
+    """Install ``mesh`` (+ optional rule overrides) as the ambient
+    distribution context for ``constrain`` / ``data_shard_count`` /
+    ``repro.core.sharded``."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev

@@ -117,9 +117,14 @@ def spherical_harmonics(vec, lmax: int = LMAX, eps: float = 1e-9):
         out[1] = jnp.stack([c1 * y, c1 * z, c1 * x], -1)
     if lmax >= 2:
         c2a, c2b, c2c = 0.5 * s(15 / pi), 0.25 * s(5 / pi), 0.25 * s(15 / pi)
+        # homogeneous form (2z²-x²-y², matching _SH_POLYS): |u| is 1 for
+        # real directions but 0 for degenerate zero-length edges
+        # (self-loops / padding), where the restricted form 3z²-1 would
+        # inject a fixed non-equivariant l=2 component
+        u2 = x * x + y * y + z * z
         out[2] = jnp.stack([
             c2a * x * y, c2a * y * z,
-            c2b * (3 * z * z - 1.0),
+            c2b * (3 * z * z - u2),
             c2a * z * x, c2c * (x * x - y * y)], -1)
     return out
 

@@ -54,10 +54,20 @@ class SeqRecConfig:
         return self.n_items + 1
 
     def emb_cfg(self) -> EmbeddingConfig:
-        if self.embedding is not None:
-            return dataclasses.replace(self.embedding, n_items=self.n_rows,
-                                       d=self.d_model)
-        return EmbeddingConfig(n_items=self.n_rows, d=self.d_model)
+        # SASRec/BERT4Rec init item embeddings at ~N(0, 0.02) (the same
+        # scale as pos_emb).  The d**-0.5 table default, amplified by
+        # the sqrt(d_model) input scaling, leaves the residual stream
+        # dominated by the current item's own embedding — scores lean
+        # toward input copy and early training stalls.  Only for kinds
+        # where init_scale IS the embedding scale: qr composes two
+        # tables multiplicatively, so 0.02 per table would square.
+        base = self.embedding if self.embedding is not None else \
+            EmbeddingConfig(0, 0)
+        scale = base.init_scale
+        if scale is None and base.kind in ("full", "jpq"):
+            scale = 0.02
+        return dataclasses.replace(base, n_items=self.n_rows,
+                                   d=self.d_model, init_scale=scale)
 
 
 def _dropout(key, x, rate):

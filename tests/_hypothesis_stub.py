@@ -1,0 +1,97 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The test suite uses a small slice of the API (``given``, ``settings``
+profiles, ``st.integers`` / ``st.sampled_from`` / ``st.composite``).
+This stub replays each ``@given`` test over ``max_examples``
+deterministic pseudo-random draws — no shrinking, no database — so the
+property tests still execute in environments where hypothesis cannot
+be installed.  ``tests/conftest.py`` registers it in ``sys.modules``
+only when ``import hypothesis`` fails; CI installs the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else int(min_value)
+    hi = 2 ** 16 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda s: s.example_from(rng), *args, **kwargs)
+        return _Strategy(sample)
+    return make
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+    _profiles = {"default": {"max_examples": 20}}
+    _current = dict(_profiles["default"])
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles[name])
+
+
+def given(*strategies):
+    def deco(test):
+        sig = inspect.signature(test)
+        all_params = list(sig.parameters.values())
+        drawn_names = [q.name for q in all_params[-len(strategies):]]
+
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            n = int(settings._current.get("max_examples", 20) or 20)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                # drawn values go by keyword so fixtures pytest passes
+                # in kwargs can't collide with positional binding
+                drawn = {name: s.example_from(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                test(*args, **kwargs, **drawn)
+        # hide the drawn params from pytest's fixture resolution: expose
+        # only the leading params (self, fixtures) the wrapper forwards
+        wrapper.__signature__ = sig.replace(
+            parameters=all_params[:-len(strategies)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this stub as the ``hypothesis`` package."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.composite = composite
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -5,3 +5,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # environments without hypothesis run the property tests through a
+    # minimal deterministic replayer instead of failing at collection
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
