@@ -8,6 +8,8 @@ serving hot-path microbench and the dry-run roofline reader.
   fig4_tradeoff     : paper Fig. 4  (model size vs NDCG, base vs RecJPQ)
   jpq_scoring       : serving hot path — full-table vs JPQ-partial-score
                       vs Pallas kernel (interpret), us/call + bytes moved
+  jpq_topk          : PQTopK fused score+top-k vs materialise-then-top-k
+                      at N ∈ {100k, 1M} (full mode), time + peak bytes
   roofline          : aggregates experiments/dryrun JSONs (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the metric the
@@ -178,6 +180,40 @@ def jpq_scoring(fast: bool = True):
          f"nnz={nb * L}")
 
 
+# --------------------------------------------- fused serving top-k
+
+def jpq_topk_bench(fast: bool = True):
+    """PQTopK fused score+top-k vs materialise-then-top-k (the serve
+    path `retrieve_topk` replaced).  Peak score buffer: [B, block_n]
+    + [nb, B, k] candidates instead of [B, N].  CPU wall-clock; the
+    structural win (and the Pallas kernel) targets TPU HBM traffic."""
+    import functools
+    from repro.kernels.jpq_topk import ops as tops
+    from repro.kernels.jpq_topk.ref import jpq_topk_lut_ref
+
+    B, m, b, k = 64, 8, 256, 100
+    key = jax.random.PRNGKey(0)
+    partial = jax.random.normal(key, (B, m, b))
+    for N in ([100_000] if fast else [100_000, 1_000_000]):
+        bn = tops.scan_block_n(N)
+        codes = jax.random.randint(jax.random.fold_in(key, N), (N, m),
+                                   0, b, jnp.int32).astype(jnp.uint8)
+        f_ref = jax.jit(functools.partial(jpq_topk_lut_ref, k=k))
+        f_fus = jax.jit(functools.partial(tops.jpq_topk_lut, k=k,
+                                          backend="scan"))
+        us_ref = time_fn(f_ref, partial, codes, iters=5, warmup=1)
+        us_fus = time_fn(f_fus, partial, codes, iters=5, warmup=1)
+        rv, ri = f_ref(partial, codes)
+        fv, fi = f_fus(partial, codes)
+        exact = bool(np.array_equal(np.asarray(rv), np.asarray(fv))
+                     and np.array_equal(np.asarray(ri), np.asarray(fi)))
+        _row(f"jpq_topk/N={N}/materialise", f"{us_ref:.0f}",
+             f"peak_scores_bytes={B * N * 4}")
+        _row(f"jpq_topk/N={N}/fused", f"{us_fus:.0f}",
+             f"peak_scores_bytes={B * bn * 4};"
+             f"speedup={us_ref / us_fus:.2f}x;exact_match={exact}")
+
+
 # ----------------------------------------------------------- roofline
 
 def roofline():
@@ -207,6 +243,7 @@ BENCHES = {
     "fig3": fig3_grid,
     "fig4": fig4_tradeoff,
     "jpq_scoring": jpq_scoring,
+    "jpq_topk": jpq_topk_bench,
     "roofline": roofline,
 }
 

@@ -1,9 +1,11 @@
 """Serving demo: two-tower retrieval with a RecJPQ-compressed catalogue,
-batched requests through the JPQ partial-score path (and the Pallas
-kernel in interpret mode, TPU being the deploy target).
+batched requests through the fused PQTopK score+top-k path (default) or
+the materialise-then-top-k reference (--no-fused), plus the Pallas
+kernel in interpret mode (TPU being the deploy target).
 
-    PYTHONPATH=src python examples/serve_retrieval.py
+    PYTHONPATH=src python examples/serve_retrieval.py [--no-fused]
 """
+import argparse
 import os
 import sys
 import time
@@ -19,7 +21,15 @@ from repro.models.recsys import TwoTower, TwoTowerConfig  # noqa: E402
 
 
 def main():
-    n_items = 200_000
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused score+top-k (no [B, N] score matrix); "
+                         "--no-fused materialises and then top-ks")
+    ap.add_argument("--n-items", type=int, default=200_000)
+    args = ap.parse_args()
+
+    n_items = args.n_items
     cfg = TwoTowerConfig(
         n_items=n_items, embed_dim=64, tower_mlp=(128, 64), hist_len=16,
         embedding=EmbeddingConfig(0, 0, kind="jpq", m=8, b=256))
@@ -31,29 +41,40 @@ def main():
         n_items=n_items, d=64, kind="jpq", m=8, b=256))
     print(f"catalogue {n_items} items; embedding store "
           f"{rep['compressed_bytes']/1e6:.1f} MB vs "
-          f"{rep['base_bytes']/1e6:.1f} MB full ({rep['ratio']:.1f}x)")
+          f"{rep['base_bytes']/1e6:.1f} MB full ({rep['ratio']:.1f}x); "
+          f"serve path: {'fused PQTopK' if args.fused else 'materialise'}")
 
-    retrieve = jax.jit(lambda p, b: model.retrieve(p, b, top_k=10))
+    retrieve = jax.jit(
+        lambda p, b: model.retrieve(p, b, top_k=10, fused=args.fused))
     rng = np.random.default_rng(0)
 
-    # batched request loop (what a serving replica does per tick)
+    # batched request loop (what a serving replica does per tick) —
+    # fresh ids per request, as in repro.launch.serve
     for batch_size in (1, 32, 256):
-        batch = {"user_hist": jnp.asarray(
+        reqs = [{"user_hist": jnp.asarray(
             rng.integers(1, n_items + 1, (batch_size, cfg.hist_len)))}
-        scores, ids = jax.block_until_ready(retrieve(params, batch))
+            for _ in range(6)]
+        scores, ids = jax.block_until_ready(retrieve(params, reqs[0]))
         t0 = time.perf_counter()
-        for _ in range(5):
+        for batch in reqs[1:]:        # dispatch only, like launch/serve
             scores, ids = jax.block_until_ready(retrieve(params, batch))
         dt = (time.perf_counter() - t0) / 5
         print(f"batch={batch_size:4d}: {dt*1e3:7.1f} ms/req-batch, "
               f"top-1 ids {np.asarray(ids[:2, 0])}")
 
-    # the same scoring through the Pallas kernel path (interpret on CPU)
+    # fused vs reference parity on the same queries
     u = model.user_vec(params, batch["user_hist"][:4])
-    from repro.kernels.jpq_scores.ops import jpq_scores
+    from repro.core import serve
     pj = params["item_emb"]
+    vf, idf = serve.retrieve_topk(model.emb, pj, u, k=10)
+    vr, idr = serve.retrieve_topk(model.emb, pj, u, k=10, fused=False)
+    print(f"fused vs materialise: ids equal={bool(np.array_equal(idf, idr))}"
+          f" max|dv|={float(jnp.max(jnp.abs(vf - vr))):.2e}")
+
+    # the same scoring through the Pallas kernel path (interpret on CPU)
+    from repro.kernels.jpq_scores.ops import jpq_scores
     s_kernel = jpq_scores(u, pj["centroids"].value, pj["codes"].value)
-    s_ref = model.emb.logits(params["item_emb"], u)
+    s_ref = model.emb.logits(pj, u)
     err = float(jnp.max(jnp.abs(s_kernel - s_ref)))
     print(f"Pallas jpq_scores kernel vs jnp path: max|diff|={err:.2e}")
 

@@ -3,7 +3,9 @@
 Public surface:
   EmbeddingConfig / make_embedding  - factory over {full, jpq, qr}
   build_codebook                    - centroid assignment strategies
+  retrieve_topk                     - fused serve-path top-k (core.serve)
   jpq / full / qr submodules        - the three embedding implementations
 """
 from repro.core.api import EmbeddingConfig, Embedding, make_embedding  # noqa: F401
 from repro.core.assign import build_codebook  # noqa: F401
+from repro.core.serve import retrieve_topk  # noqa: F401

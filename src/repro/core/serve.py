@@ -1,0 +1,43 @@
+"""Serve-path entrypoint: top-k catalogue retrieval for any embedding
+kind, fused for JPQ.
+
+``retrieve_topk`` is what serving replicas call instead of
+``emb.logits(...)`` + top-k.  For JPQ tables it routes to the PQTopK
+fused path (repro/kernels/jpq_topk via ``sharded.fused_topk_over_codes``):
+the per-query partial-score LUT ``[B, m, b]`` is contracted against
+code tiles with a running top-k, so the ``[B, n_items]`` score matrix
+is never materialised — the PQTopK inference win on top of RecJPQ's
+training-time compression.  Full and QR tables (no sub-id structure to
+exploit) keep the materialise-then-hierarchical-top-k path
+(``sharded.topk_over_items``).
+
+Both routes honour the ambient mesh rules (docs/sharding.md): under a
+mesh with a ``model`` axis the codes/scores are row-sharded and only
+``[B, shards·k]`` candidates cross devices.  ``fused=False`` forces
+the reference path for any kind — the parity hook the serve tests use.
+"""
+from __future__ import annotations
+
+from repro import dist
+from repro.core import jpq as _jpq
+from repro.core import sharded
+
+
+def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
+                  block_n: int | None = None, backend: str | None = None):
+    """emb: core.api.Embedding, p: its params, h [..., d] query vectors
+    -> (values, ids) [..., min(k, n_items)] over the whole catalogue."""
+    lead = h.shape[:-1]
+    B = 1
+    for s in lead:
+        B *= s
+    if fused and emb.cfg.kind == "jpq":
+        part = _jpq.partial_scores(p, h)                 # [..., m, b]
+        part2 = part.reshape(B, *part.shape[len(lead):])
+        v, i = sharded.fused_topk_over_codes(
+            part2, p["codes"].value, k, block_n=block_n, backend=backend)
+    else:
+        scores = emb.logits(p, h.reshape(B, -1))         # [B, N]
+        scores = dist.constrain(scores, ("batch", "items"))
+        v, i = sharded.topk_over_items(scores, int(k))
+    return v.reshape(*lead, -1), i.reshape(*lead, -1)

@@ -51,32 +51,87 @@ def pooled_lookup(table, ids, weights):
     return f(table, ids, weights.astype(table.dtype))
 
 
+def _merge_local_topk(v, i, local_n: int, k: int):
+    """Merge per-shard top-k candidate lists into the global top-k.
+
+    v, i [B, k_loc] shard-local (ids shard-relative) -> (values, ids)
+    [B, k] global.  All-gathers only the [B, shards·k_loc] candidates;
+    shards concatenate in ascending-row order and top_k is stable, so
+    ties resolve to the smallest global item id — identical to a top-k
+    over the unsharded scores."""
+    i = i + jax.lax.axis_index("model") * local_n
+    v_all = jax.lax.all_gather(v, "model", axis=1, tiled=True)
+    i_all = jax.lax.all_gather(i, "model", axis=1, tiled=True)
+    vv, pos = jax.lax.top_k(v_all, k)
+    return vv, jnp.take_along_axis(i_all, pos, axis=1)
+
+
 def topk_over_items(scores, k: int):
     """Hierarchical top-k over an item-sharded score matrix.
 
-    scores [B, N] (N shardable over 'model') -> (values, ids) [B, k].
-    Local top-k per shard, all-gather only [B, shards*k] candidates,
-    final top-k — instead of GSPMD gathering the full [B, N] matrix.
-    §Perf retrieval iteration.
+    scores [B, N] (N shardable over 'model') -> (values, ids)
+    [B, min(k, N)].  Local top-k per shard, all-gather only
+    [B, shards*k] candidates, final top-k — instead of GSPMD gathering
+    the full [B, N] matrix.  §Perf retrieval iteration.
     """
     mesh = _rules._CTX.mesh
     B, N = scores.shape
+    k = min(int(k), N)
     if mesh is None or "model" not in mesh.shape \
             or N % mesh.shape["model"] != 0:
         return jax.lax.top_k(scores, k)
     local_n = N // mesh.shape["model"]
+    k_loc = min(k, local_n)
     spec_b = _rules.resolve_axes(("batch", None), (B, N), mesh)
     out_spec = _rules.resolve_axes(("batch", None), (B, k), mesh)
 
     def body(s):                                   # [b, N/shards]
-        v, i = jax.lax.top_k(s, k)
-        i = i + jax.lax.axis_index("model") * local_n
-        v_all = jax.lax.all_gather(v, "model", axis=1, tiled=True)
-        i_all = jax.lax.all_gather(i, "model", axis=1, tiled=True)
-        vv, pos = jax.lax.top_k(v_all, k)
-        return vv, jnp.take_along_axis(i_all, pos, axis=1)
+        return _merge_local_topk(*jax.lax.top_k(s, k_loc), local_n, k)
 
     f = shard_map(body, mesh=mesh,
                   in_specs=(PartitionSpec(spec_b[0], "model"),),
                   out_specs=(out_spec, out_spec), check_vma=False)
     return f(scores)
+
+
+def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
+                          backend: str | None = None):
+    """PQTopK serving: fused score+top-k over row-sharded codes.
+
+    partial [B, m, b] fp32 LUT (replicated over 'model'), codes [N, m]
+    (rows shardable over 'model') -> (values, ids) [B, min(k, N)].
+
+    Each model shard runs the fused kernel over its own code rows —
+    the [B, N] score matrix is never materialised, locally or
+    globally — and only the [B, shards·k] candidate lists are
+    all-gathered before the final merge.  Shards are swept in
+    ascending-row order and each local list ties-breaks on item id, so
+    the merged result is bit-identical to the unsharded fused path
+    (and to lax.top_k over materialised scores).  §Serve-path.
+    """
+    from repro.kernels.jpq_topk import ops as _tops
+    mesh = _rules._CTX.mesh
+    B = partial.shape[0]
+    N = codes.shape[0]
+    k_out = min(int(k), N)
+    if (mesh is None or "model" not in mesh.shape
+            or N % mesh.shape["model"] != 0):
+        return _tops.jpq_topk_lut(partial, codes, k_out, block_n=block_n,
+                                  backend=backend)
+    shards = mesh.shape["model"]
+    local_n = N // shards
+    k_loc = min(k_out, local_n)
+    spec_b = _rules.resolve_axes(("batch", None), (B, N), mesh)
+    out_spec = _rules.resolve_axes(("batch", None), (B, k_out), mesh)
+
+    def body(part_l, codes_l):               # [b, m, b_c], [N/shards, m]
+        v, i = _tops.jpq_topk_lut(part_l, codes_l, k_loc,
+                                  block_n=block_n, backend=backend)
+        return _merge_local_topk(v, i, local_n, k_out)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(PartitionSpec(spec_b[0], None, None),
+                  PartitionSpec("model", None)),
+        out_specs=(out_spec, out_spec), check_vma=False)
+    return f(partial, codes)

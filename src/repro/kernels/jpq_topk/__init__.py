@@ -1,0 +1,1 @@
+from repro.kernels.jpq_topk.ops import jpq_topk, jpq_topk_lut  # noqa: F401

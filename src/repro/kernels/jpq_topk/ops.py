@@ -1,0 +1,123 @@
+"""jit'd public wrappers for the fused PQTopK serving path.
+
+Three backends behind one call:
+  "pallas"    - the Mosaic kernel (TPU; the deploy target)
+  "interpret" - the same kernel through the Pallas interpreter — the
+                CPU parity oracle for tests
+  "scan"      - a mathematically *identical* lax.scan over item blocks
+                (gather tile scores, block-local top-k, one final merge
+                over the [B, nb·k] candidates) — the fast CPU/GPU
+                fallback.  Blocks sweep in ascending-id order and every
+                top_k is stable, so values AND tie-broken ids match the
+                kernel bit-for-bit at any block_n.  Peak live score
+                buffer: [B, block_n] + [nb, B, k] candidates, never
+                [B, N].
+
+``backend=None`` resolves to "pallas" on TPU and "scan" elsewhere.
+All entrypoints clamp ``k`` to ``min(k, N)`` (lax.top_k on the
+materialised matrix would reject k > N) and handle N not a multiple of
+block_n by masking padded columns to −inf against the real N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jpq_scores.ops import _ceil_mult, _on_tpu
+from repro.kernels.jpq_topk.jpq_topk import jpq_topk_tiles
+
+
+def jpq_topk(h, centroids, codes, k: int, *, block_b: int = 256,
+             block_n: int | None = None, backend: str | None = None):
+    """h [..., d], centroids [m, b, dk], codes [N, m] ->
+    (values, ids) [..., min(k, N)] — top-k catalogue retrieval without
+    materialising the [..., N] score matrix."""
+    m, b, dk = centroids.shape
+    lead = h.shape[:-1]
+    B = 1
+    for s in lead:
+        B *= s
+    h2 = h.reshape(B, m, dk).astype(jnp.float32)
+    partial = jnp.einsum("bmk,mck->bmc", h2, centroids.astype(jnp.float32))
+    v, i = jpq_topk_lut(partial, codes, k, block_b=block_b,
+                        block_n=block_n, backend=backend)
+    return v.reshape(*lead, -1), i.reshape(*lead, -1)
+
+
+def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
+                 block_n: int | None = None, backend: str | None = None):
+    """partial [B, m, b] fp32, codes [N, m] -> (values, ids)
+    [B, min(k, N)].  block_n=None picks the backend's native tile:
+    VMEM-sized (512) for the kernel, a dispatch-amortising near-divisor
+    of N around _SCAN_BLOCK_N (131072) for the XLA scan."""
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "scan"
+    B, m, b = partial.shape
+    N = codes.shape[0]
+    k = min(int(k), N)
+    assert k > 0 and backend in ("pallas", "interpret", "scan"), (k, backend)
+    if backend == "scan":
+        bn = block_n or scan_block_n(N)
+        return _jpq_topk_scan(partial.astype(jnp.float32),
+                              codes.astype(jnp.int32), k=k,
+                              block_n=min(bn, _ceil_mult(N, 128)))
+    bb = min(block_b, _ceil_mult(B, 8))
+    bn = min(block_n or 512, _ceil_mult(N, 128))
+    Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, bn)
+    partial = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, Np - N), (0, 0)))
+    v, i = jpq_topk_tiles(partial, codes_p, k=k, n_items=N, block_b=bb,
+                          block_n=bn, interpret=backend == "interpret")
+    return v[:B], i[:B]
+
+
+_SCAN_BLOCK_N = 131072
+
+
+def scan_block_n(N: int, target: int = _SCAN_BLOCK_N) -> int:
+    """Near-divisor block size for the scan backend: the closest tile
+    count to N/target, so the padded tail is < 128 items instead of a
+    half-empty block of wasted gathers."""
+    nb = max(1, round(N / target))
+    return _ceil_mult(-(-N // nb), 128)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def _jpq_topk_scan(partial, codes, *, k: int, block_n: int):
+    """Blockwise gather + block-local top-k, one final candidate merge;
+    the kernel's algorithm as plain XLA.
+
+    Block-local top-k never drops a global winner (each block keeps its
+    k best, ties to the smallest id), and the final stable top_k over
+    blocks stacked in ascending-id order reproduces the materialised
+    tie-break exactly."""
+    B, m, b = partial.shape
+    N = codes.shape[0]
+    Np = _ceil_mult(N, block_n)
+    nb = Np // block_n
+    kb = min(k, block_n)
+    codes_p = jnp.pad(codes, ((0, Np - N), (0, 0)))
+    blocks = codes_p.reshape(nb, block_n, m)
+    starts = jnp.arange(nb, dtype=jnp.int32) * block_n
+
+    def step(_, xs):
+        cb, n0 = xs                                       # [Nt, m], scalar
+        s = jnp.take(partial[:, 0, :], cb[:, 0], axis=1)  # [B, Nt]
+        for j in range(1, m):
+            s = s + jnp.take(partial[:, j, :], cb[:, j], axis=1)
+        if Np != N:                     # mask only the block crossing N
+            ids = n0 + jnp.arange(block_n, dtype=jnp.int32)
+            s = jax.lax.cond(n0 + block_n > N,
+                             lambda x: jnp.where(ids[None, :] < N, x,
+                                                 -jnp.inf),
+                             lambda x: x, s)
+        v, pos = jax.lax.top_k(s, kb)
+        return None, (v, pos + n0)
+
+    _, (vs, is_) = jax.lax.scan(step, None, (blocks, starts))
+    cat_v = jnp.swapaxes(vs, 0, 1).reshape(B, nb * kb)    # ascending-id
+    cat_i = jnp.swapaxes(is_, 0, 1).reshape(B, nb * kb)
+    v, pos = jax.lax.top_k(cat_v, k)
+    return v, jnp.take_along_axis(cat_i, pos, axis=1)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for jpq_topk: materialise [B, N], then lax.top_k.
+
+This IS the path the fused kernel replaces — kept as the parity
+reference and the benchmark baseline.  ``lax.top_k`` breaks ties by
+lowest index (= lowest item id), the contract the fused merge must
+reproduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jpq_scores.ref import jpq_scores_lut_ref, jpq_scores_ref
+
+
+def jpq_topk_lut_ref(partial, codes, k: int):
+    """partial [B, m, b] fp32, codes [N, m] -> (values, ids) [B, min(k, N)]."""
+    codes = codes.astype(jnp.int32)
+    scores = jpq_scores_lut_ref(partial, codes)          # [B, N] materialised
+    return jax.lax.top_k(scores, min(k, codes.shape[0]))
+
+
+def jpq_topk_ref(h, centroids, codes, k: int):
+    """h [..., d], centroids [m, b, dk], codes [N, m] ->
+    (values, ids) [..., min(k, N)]."""
+    codes = codes.astype(jnp.int32)
+    scores = jpq_scores_ref(h, centroids, codes)         # [..., N]
+    return jax.lax.top_k(scores, min(k, codes.shape[0]))

@@ -1,14 +1,52 @@
 """Serving entrypoint: batched retrieval / scoring replica loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval-jpq \
-        --requests 20 --batch-size 64
+        --requests 20 --batch-size 64 --fused
 
 Loads the arch's smoke config (or a checkpoint via --ckpt-dir), jits the
 serve program, and drives batched requests through it, reporting
 latency percentiles — the serve_p99 cell's runnable counterpart.
+
+Every request carries *fresh* ids (``make_requests``): replaying one
+tiled batch — what this loop used to do — measures a cached dispatch of
+identical device buffers, not realistic serving, and under-reports
+p50/p99.  ``--seed`` makes the request stream reproducible.  For archs
+with a ``retrieve`` serve path, ``--fused/--no-fused`` switches between
+the PQTopK fused score+top-k path and the materialise-then-top-k
+reference (docs/serving.md).
 """
 import argparse
+import inspect
 import time
+
+import numpy as np
+
+
+def make_requests(template, batch_size: int, n_requests: int, seed: int):
+    """Per-iteration request batches from a template batch.
+
+    Integer fields (ids) are re-drawn uniformly over the template's
+    observed [min, max] value range with the template's dtype and
+    trailing shape — so every iteration dispatches a fresh id pattern
+    against the same compiled program shape.  Float fields are tiled
+    from the template (dense features; their values don't gate any
+    trace).  Deterministic in ``seed``; yields ``n_requests`` dicts of
+    numpy arrays with leading dim ``batch_size``.
+    """
+    rng = np.random.default_rng(seed)
+    tmpl = {k: np.asarray(v) for k, v in template.items()}
+    for _ in range(n_requests):
+        req = {}
+        for name, v in tmpl.items():
+            shape = (batch_size,) + v.shape[1:]
+            if np.issubdtype(v.dtype, np.integer):
+                lo, hi = int(v.min()), int(v.max())
+                req[name] = rng.integers(lo, hi, shape, dtype=v.dtype,
+                                         endpoint=True)
+            else:
+                reps = max(-(-batch_size // v.shape[0]), 1)
+                req[name] = np.concatenate([v] * reps, 0)[:batch_size]
+        yield req
 
 
 def main():
@@ -16,12 +54,17 @@ def main():
     ap.add_argument("--arch", default="two-tower-retrieval-jpq")
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused PQTopK serve path for retrieval archs "
+                         "(--no-fused: materialise-then-top-k reference)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.configs import get_bundle
     from repro.nn import module as nn
 
@@ -35,26 +78,31 @@ def main():
         print(f"restored step {step} from {args.ckpt_dir}")
 
     if hasattr(model, "retrieve"):
-        fn = jax.jit(lambda p, b: model.retrieve(p, b, top_k=10))
+        kw = {"top_k": args.top_k}
+        if "fused" in inspect.signature(model.retrieve).parameters:
+            kw["fused"] = args.fused
+        fn = jax.jit(lambda p, b: model.retrieve(p, b, **kw))
     else:
         fn = jax.jit(model.serve)
 
-    # replicate the smoke batch to the requested batch size
-    def tile(v):
-        v = jnp.asarray(v)
-        reps = max(args.batch_size // v.shape[0], 1)
-        return jnp.concatenate([v] * reps, 0)[:args.batch_size]
-
-    req = {k: tile(v) for k, v in batch.items()
-           if k not in ("label", "labels")}
-    jax.block_until_ready(fn(params, req))      # compile
+    template = {k: v for k, v in batch.items()
+                if k not in ("label", "labels")}
+    reqs = make_requests(template, args.batch_size, args.requests + 1,
+                         args.seed)
+    warmup = {k: jnp.asarray(v) for k, v in next(reqs).items()}
+    jax.block_until_ready(fn(params, warmup))      # compile
     lats = []
-    for _ in range(args.requests):
+    for req in reqs:
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(params, req))
+        jax.block_until_ready(fn(params,
+                                 {k: jnp.asarray(v) for k, v in
+                                  req.items()}))
         lats.append((time.perf_counter() - t0) * 1e3)
     lats = np.asarray(lats)
+    mode = ("fused" if args.fused else "materialise") \
+        if hasattr(model, "retrieve") else "serve"
     print(f"{args.arch}: batch={args.batch_size} n={args.requests} "
+          f"path={mode} seed={args.seed} "
           f"p50={np.percentile(lats, 50):.2f}ms "
           f"p99={np.percentile(lats, 99):.2f}ms")
 

@@ -113,16 +113,17 @@ class TwoTower:
                        == jnp.arange(b)[None, :])
         return loss, {"loss": loss, "in_batch_acc": acc}
 
-    def retrieve(self, p, batch, *, top_k: int = 100):
+    def retrieve(self, p, batch, *, top_k: int = 100, fused: bool = True):
         """Score user(s) against the full catalogue; returns top-k.
         With kind="jpq" the catalogue read is m bytes/item (codes) not
-        4d — the paper's compression as a serving bandwidth win.
-        Top-k is hierarchical (shard-local then merged)."""
-        from repro.core import sharded
+        4d — and the default fused path (core.serve.retrieve_topk)
+        merges scoring with a running top-k so the [B, n_rows] score
+        matrix is never materialised.  fused=False keeps the
+        materialise-then-hierarchical-top-k reference path."""
+        from repro.core import serve
         u = self.user_vec(p, batch["user_hist"])           # [B, d]
-        scores = self.emb.logits(p["item_emb"], u)         # [B, n_rows]
-        scores = dist.constrain(scores, ("batch", "items"))
-        return sharded.topk_over_items(scores, top_k)
+        return serve.retrieve_topk(self.emb, p["item_emb"], u, k=top_k,
+                                   fused=fused)
 
     def bulk_retrieve(self, p, batch, *, top_k: int = 100,
                       chunk: int = 2048):

@@ -1,7 +1,8 @@
 """Minimal stand-in for ``hypothesis`` when the real package is absent.
 
 The test suite uses a small slice of the API (``given``, ``settings``
-profiles, ``st.integers`` / ``st.sampled_from`` / ``st.composite``).
+profiles, ``st.integers`` / ``st.sampled_from`` / ``st.tuples`` /
+``st.booleans`` / ``st.composite``).
 This stub replays each ``@given`` test over ``max_examples``
 deterministic pseudo-random draws — no shrinking, no database — so the
 property tests still execute in environments where hypothesis cannot
@@ -34,6 +35,15 @@ def integers(min_value=None, max_value=None):
 def sampled_from(elements):
     seq = list(elements)
     return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example_from(rng)
+                                       for s in strategies))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
 
 def composite(fn):
@@ -91,6 +101,8 @@ def install():
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
     st.sampled_from = sampled_from
+    st.tuples = tuples
+    st.booleans = booleans
     st.composite = composite
     hyp.strategies = st
     sys.modules["hypothesis"] = hyp

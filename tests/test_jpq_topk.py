@@ -1,0 +1,144 @@
+"""Parity harness for the fused PQTopK serving path.
+
+The fused kernel (interpret mode on CPU; TPU is the compile target) and
+the XLA scan fallback must both match ``jax.lax.top_k`` over the
+materialised score matrix EXACTLY — values bit-for-bit (one-hot picks
+and gathers are exact) and ids including tie-breaks (stable on item
+id).  Shapes sweep N not a multiple of block_n, k > N, k == N, and
+duplicate scores.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.jpq_topk.ops import jpq_topk, jpq_topk_lut
+from repro.kernels.jpq_topk.ref import jpq_topk_lut_ref, jpq_topk_ref
+
+settings.register_profile("jt", max_examples=12, deadline=None)
+settings.load_profile("jt")
+
+BACKENDS = ["interpret", "scan"]
+
+
+def _rand_case(seed, B, m, b, N):
+    k = jax.random.PRNGKey(seed)
+    partial = jax.random.normal(jax.random.fold_in(k, 1), (B, m, b))
+    codes = jax.random.randint(jax.random.fold_in(k, 2), (N, m), 0, b,
+                               jnp.int32)
+    return partial, codes
+
+
+class TestFusedMatchesReference:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("B,m,b,N,k,bn", [
+        (1, 1, 2, 7, 3, 512),       # tiny, N << block_n
+        (3, 2, 16, 100, 10, 512),
+        (5, 4, 32, 1000, 50, 128),  # N not a multiple of block_n
+        (4, 8, 256, 2048, 128, 512),
+        (2, 2, 8, 513, 200, 128),   # last tile is 1 item wide
+        (9, 3, 64, 300, 300, 128),  # k == N
+    ])
+    def test_exact(self, backend, B, m, b, N, k, bn):
+        partial, codes = _rand_case(B * N + k, B, m, b, N)
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        v, i = jpq_topk_lut(partial, codes, k, block_n=bn, backend=backend)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_k_larger_than_n_clamps(self, backend):
+        partial, codes = _rand_case(0, 2, 2, 8, 5)
+        v, i = jpq_topk_lut(partial, codes, 9, block_n=512,
+                            backend=backend)
+        assert v.shape == i.shape == (2, 5)   # clamped to N
+        rv, ri = jpq_topk_lut_ref(partial, codes, 9)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_duplicate_scores_tie_break_on_item_id(self, backend):
+        # integer-valued LUT + few centroids => massive score ties; the
+        # winning ids must match lax.top_k's stable lowest-id order
+        key = jax.random.PRNGKey(7)
+        partial = jax.random.randint(
+            jax.random.fold_in(key, 1), (4, 2, 4), 0, 3).astype(jnp.float32)
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (200, 2),
+                                   0, 4, jnp.int32)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 20)
+        v, i = jpq_topk_lut(partial, codes, 20, block_n=64,
+                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+    def test_all_identical_scores(self):
+        # the fully-degenerate tie: every item scores the same, top-k
+        # must return ids 0..k-1 in order
+        partial = jnp.ones((2, 2, 4))
+        codes = jnp.zeros((50, 2), jnp.int32)
+        for backend in BACKENDS:
+            v, i = jpq_topk_lut(partial, codes, 8, block_n=16,
+                                backend=backend)
+            np.testing.assert_array_equal(
+                np.asarray(i), np.tile(np.arange(8), (2, 1)))
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.full((2, 8), 2.0))
+
+    def test_from_h_entrypoint_and_leading_dims(self):
+        key = jax.random.PRNGKey(3)
+        cent = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 4))
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (30, 2),
+                                   0, 8, jnp.int32)
+        h = jax.random.normal(jax.random.fold_in(key, 3), (3, 5, 8))
+        v, i = jpq_topk(h, cent, codes, 6, backend="scan")
+        rv, ri = jpq_topk_ref(h, cent, codes, 6)
+        assert v.shape == i.shape == (3, 5, 6)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(v), np.asarray(rv),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_uint8_codes(self):
+        partial, codes = _rand_case(11, 3, 4, 16, 400)
+        v8, i8 = jpq_topk_lut(partial, codes.astype(jnp.uint8), 17,
+                              backend="scan")
+        v, i = jpq_topk_lut(partial, codes, 17, backend="scan")
+        np.testing.assert_array_equal(np.asarray(v8), np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(i8), np.asarray(i))
+
+
+class TestPropertySweep:
+    @given(st.integers(1, 400), st.sampled_from([1, 2, 4, 8]),
+           st.sampled_from([2, 16, 64]),
+           st.tuples(st.integers(1, 6), st.integers(1, 64)),
+           st.sampled_from([64, 128, 512]))
+    def test_random_shapes(self, N, m, b, Bk, bn):
+        B, k = Bk
+        key = jax.random.PRNGKey(N * 31 + m * 7 + B + k)
+        partial = jax.random.normal(jax.random.fold_in(key, 1), (B, m, b))
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (N, m),
+                                   0, b, jnp.int32)
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        for backend in BACKENDS:
+            v, i = jpq_topk_lut(partial, codes, k, block_n=bn,
+                                backend=backend)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv),
+                                          err_msg=f"{backend} values")
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri),
+                                          err_msg=f"{backend} ids")
+
+    @given(st.integers(1, 200), st.integers(1, 300),
+           st.sampled_from([32, 128]))
+    def test_random_ties(self, N, k, bn):
+        # low-entropy integer scores: ties are the common case
+        key = jax.random.PRNGKey(N * 13 + k)
+        partial = jax.random.randint(
+            jax.random.fold_in(key, 1), (2, 2, 8), 0, 2).astype(jnp.float32)
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (N, 2),
+                                   0, 8, jnp.int32)
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        for backend in BACKENDS:
+            v, i = jpq_topk_lut(partial, codes, k, block_n=bn,
+                                backend=backend)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
