@@ -62,14 +62,16 @@ def main():
         print(f"batch={batch_size:4d}: {dt*1e3:7.1f} ms/req-batch, "
               f"top-1 ids {np.asarray(ids[:2, 0])}")
 
-    # fused vs reference parity on the same queries
+    # fused vs reference parity on the same queries, pruned included
     u = model.user_vec(params, batch["user_hist"][:4])
     from repro.core import serve
     pj = params["item_emb"]
     vf, idf = serve.retrieve_topk(model.emb, pj, u, k=10)
     vr, idr = serve.retrieve_topk(model.emb, pj, u, k=10, fused=False)
+    vp, idp = serve.retrieve_topk(model.emb, pj, u, k=10, prune=True)
     print(f"fused vs materialise: ids equal={bool(np.array_equal(idf, idr))}"
-          f" max|dv|={float(jnp.max(jnp.abs(vf - vr))):.2e}")
+          f" max|dv|={float(jnp.max(jnp.abs(vf - vr))):.2e}; "
+          f"pruned ids equal={bool(np.array_equal(idp, idr))}")
 
     # the same scoring through the Pallas kernel path (interpret on CPU)
     from repro.kernels.jpq_scores.ops import jpq_scores

@@ -111,6 +111,30 @@ def bpr_item_embeddings(users, items, n_users: int, n_items: int, m: int,
     return V
 
 
+# ------------------------------------------- serving: popularity order
+
+def popularity_permutation(counts=None, *, interactions=None,
+                           n_items: Optional[int] = None) -> np.ndarray:
+    """Sweep permutation for score-bound pruned serving: item ids sorted
+    by descending (train-set) popularity, ties by ascending id.
+
+    High scorers concentrate at the front of the sweep, so the fused
+    top-k threshold tightens within the first tiles and the long tail
+    is skipped (dynamic-pruning paper §4).  Host-side, like every other
+    assignment artefact.  Pass per-item ``counts [n_items]`` directly,
+    or ``interactions=(users, item_rows)`` + ``n_items`` to tally them.
+    Returns int64 ``perm [n_items]``: original item id per sweep slot.
+    """
+    if counts is None:
+        if interactions is None or n_items is None:
+            raise ValueError("need counts, or interactions + n_items")
+        counts = np.zeros(int(n_items), np.int64)
+        np.add.at(counts, np.asarray(interactions[1], np.int64), 1)
+    counts = np.asarray(counts)
+    # stable sort on -counts: equal-count items stay in ascending id
+    return np.argsort(-counts, kind="stable")
+
+
 # ------------------------------------------------------------- factory
 
 def build_codebook(strategy: str, n_items: int, m: int, b: int = 256, *,

@@ -15,6 +15,13 @@ Both routes honour the ambient mesh rules (docs/sharding.md): under a
 mesh with a ``model`` axis the codes/scores are row-sharded and only
 ``[B, shards·k]`` candidates cross devices.  ``fused=False`` forces
 the reference path for any kind — the parity hook the serve tests use.
+
+``prune`` turns on score-bound dynamic pruning of code tiles (bit-exact
+— see docs/serving.md): pass True, or a precomputed
+``kernels.jpq_topk.prepare_pruning(...)`` state so the per-request jit
+does no codes-only work; ``perm`` optionally sweeps the catalogue in
+popularity order (``core.assign.popularity_permutation``) so the
+threshold tightens early.  Both are JPQ-fused-path-only knobs.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ from repro.core import sharded
 
 
 def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
-                  block_n: int | None = None, backend: str | None = None):
+                  block_n: int | None = None, backend: str | None = None,
+                  prune=None, perm=None):
     """emb: core.api.Embedding, p: its params, h [..., d] query vectors
     -> (values, ids) [..., min(k, n_items)] over the whole catalogue."""
     lead = h.shape[:-1]
@@ -35,7 +43,8 @@ def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
         part = _jpq.partial_scores(p, h)                 # [..., m, b]
         part2 = part.reshape(B, *part.shape[len(lead):])
         v, i = sharded.fused_topk_over_codes(
-            part2, p["codes"].value, k, block_n=block_n, backend=backend)
+            part2, p["codes"].value, k, block_n=block_n, backend=backend,
+            prune=prune, perm=perm)
     else:
         scores = emb.logits(p, h.reshape(B, -1))         # [B, N]
         scores = dist.constrain(scores, ("batch", "items"))

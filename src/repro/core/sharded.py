@@ -95,7 +95,7 @@ def topk_over_items(scores, k: int):
 
 
 def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
-                          backend: str | None = None):
+                          backend: str | None = None, prune=None, perm=None):
     """PQTopK serving: fused score+top-k over row-sharded codes.
 
     partial [B, m, b] fp32 LUT (replicated over 'model'), codes [N, m]
@@ -108,6 +108,13 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
     ascending-row order and each local list ties-breaks on item id, so
     the merged result is bit-identical to the unsharded fused path
     (and to lax.top_k over materialised scores).  §Serve-path.
+
+    ``prune``/``perm``: score-bound dynamic pruning (docs/serving.md).
+    Sharded, each shard prunes against its OWN running k_loc-th value —
+    thresholds never cross devices, and the [B, shards·k] merge is
+    unchanged.  A global PruneState/perm cannot be row-sliced, so under
+    a mesh any truthy ``prune`` builds per-shard state over the local
+    rows and ``perm`` is ignored (local sweeps stay ascending-id).
     """
     from repro.kernels.jpq_topk import ops as _tops
     mesh = _rules._CTX.mesh
@@ -117,7 +124,7 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
     if (mesh is None or "model" not in mesh.shape
             or N % mesh.shape["model"] != 0):
         return _tops.jpq_topk_lut(partial, codes, k_out, block_n=block_n,
-                                  backend=backend)
+                                  backend=backend, prune=prune, perm=perm)
     shards = mesh.shape["model"]
     local_n = N // shards
     k_loc = min(k_out, local_n)
@@ -126,7 +133,8 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
 
     def body(part_l, codes_l):               # [b, m, b_c], [N/shards, m]
         v, i = _tops.jpq_topk_lut(part_l, codes_l, k_loc,
-                                  block_n=block_n, backend=backend)
+                                  block_n=block_n, backend=backend,
+                                  prune=bool(prune))
         return _merge_local_topk(v, i, local_n, k_out)
 
     f = shard_map(

@@ -114,8 +114,17 @@ class SyntheticSequences:
             labels[i] = self._pad_left(s[1:], L)
         batch = {"seq": seq, "labels": labels}
         if n_negatives:
-            batch["negatives"] = rng.integers(
-                1, c.n_items + 1, (batch_size, L, n_negatives))
+            if c.n_items > 1:
+                # uniform over the n_items - 1 NON-label items: draw in
+                # [1, n_items - 1] and bump past the positive, so a
+                # "negative" can never collide with its label (a
+                # colliding draw silently pushed the positive down)
+                neg = rng.integers(1, c.n_items,
+                                   (batch_size, L, n_negatives))
+                batch["negatives"] = neg + (neg >= labels[..., None])
+            else:
+                batch["negatives"] = np.ones(
+                    (batch_size, L, n_negatives), np.int64)
         return batch
 
     def eval_batch(self, users, *, split: str = "test"):
@@ -139,7 +148,9 @@ class SyntheticSequences:
         pos = np.zeros(batch_size, np.int64)
         for i, u in enumerate(users):
             s = self.train_seq(u)
-            cut = rng.integers(1, len(s))
+            # length-1 train sequences (raw length exactly 3) have no
+            # interior cut: empty history, the lone item is the positive
+            cut = int(rng.integers(1, len(s))) if len(s) > 1 else 0
             hist[i] = self._pad_left(s[:cut], hist_len)
             pos[i] = s[cut]
         # logQ correction: sampling probability ~ empirical popularity

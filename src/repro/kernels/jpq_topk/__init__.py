@@ -1,1 +1,2 @@
-from repro.kernels.jpq_topk.ops import jpq_topk, jpq_topk_lut  # noqa: F401
+from repro.kernels.jpq_topk.ops import (  # noqa: F401
+    PruneState, jpq_topk, jpq_topk_lut, prepare_pruning)

@@ -15,7 +15,11 @@ tile scores ``S [Bt, Nt]`` in registers/VMEM; padding columns (N not a
 multiple of block_n) are masked to −inf against the *global* item id;
 then the running list is merged by one ``top_k`` over the concatenated
 ``[Bt, k + Nt]`` candidates.  One-hot picks are exact (x·1 + Σ 0), so
-fused scores are bit-identical to the gather reference.
+fused scores are bit-identical to the gather reference — with one
+domain caveat: a ``-0.0`` LUT entry sums to ``+0.0`` through the dot
+(−0.0 + 0.0 = +0.0) while a gather keeps the sign, and ``lax.top_k``'s
+IEEE total order ranks +0.0 above −0.0; real inner-product LUTs don't
+produce −0.0.
 
 Grid: ``(B/Bt, N/Nt)`` with the item dim innermost and *sequential*
 ("arbitrary" semantics): the output blocks are revisited at every item
@@ -28,6 +32,16 @@ input index, the running list sits *before* the tile in the merge
 concat, and item tiles are swept in ascending-id order — so equal
 scores resolve to the smallest item id, exactly like a top-k over the
 materialised matrix.
+
+Dynamic pruning (the PQTopK follow-up, "Efficient Recommendation with
+Millions of Items by Dynamic Pruning of Sub-Item Embeddings"):
+``jpq_topk_tiles_pruned`` additionally takes a per-tile code-presence
+mask and predicates the whole tile body (``pl.when``) on the score
+upper bound ``ub = Σ_j max{P[j, c] : c in tile}`` beating the running
+k-th value read from the revisited output block — most tiles of a
+popularity-ordered catalogue are skipped exactly, with zero effect on
+the result (an item's score never exceeds the bound, and an equal
+score loses the id tie-break).
 
 VMEM per step (Bt=256, Nt=512, m=8, b=256, k=128):
   P tile   256·8·256·4 = 2.0 MiB     one-hot 256·512·4 = 0.5 MiB
@@ -45,6 +59,64 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def desc_sort_key(v):
+    """int32 sort key: ascending key order == IEEE-total-order
+    DESCENDING value order — i.e. exactly ``lax.top_k``'s ranking,
+    including +0.0 above -0.0 (``lax.sort``'s float comparator ties
+    ±0.0, top_k's does not, so float keys cannot reproduce top_k).
+    Negation reverses the total order; the sign-magnitude -> ordered-int
+    map is the classic radix-sort trick."""
+    b = jax.lax.bitcast_convert_type(-v, jnp.int32)
+    return jnp.where(b < 0, b ^ jnp.int32(0x7FFFFFFF), b)
+
+
+def topk_total_order(cat_v, cat_i, k: int):
+    """Exact top-k of candidates by (value desc, id asc) — the
+    sweep-order-independent total order a permuted sweep needs, equal
+    to stable ``lax.top_k`` over ascending-id candidates.
+
+    Cost shape matters: a variadic 2-key ``lax.sort`` over the full
+    candidate width W hits XLA CPU's scalar comparator loop, and int32
+    ``top_k`` takes the same slow path (~30x slower than f32 top_k at
+    W ~ 10^4).  So both wide reductions here are *f32* top_k passes —
+    values directly (f32 top_k already ranks by the IEEE total order,
+    +0.0 above -0.0), then negated ids masked to the k-th-value tie
+    class (exact for ids < 2^24) — with bit-level int keys only in
+    cheap elementwise compares, and the one variadic sort is over the
+    assembled [B, 2k] pool:
+
+      * the value pass fixes the output VALUE multiset
+        (tie-independent) and the strictly-above-threshold ids;
+      * the tie pass picks the (k - #strictly_above) smallest ids at
+        the threshold value (bit-exact class: int key equality);
+      * the small sort orders the union.
+    """
+    va, p1 = jax.lax.top_k(cat_v, k)
+    ia = jnp.take_along_axis(cat_i, p1, axis=1)
+    # the barrier stops XLA merging the θ slice into top_k's own
+    # sort+slice lowering, which un-pattern-matches the CPU TopK
+    # rewrite and silently degrades to a full W-wide sort (~25x)
+    theta_v = jax.lax.optimization_barrier(va)[:, -1:]
+    ikey = desc_sort_key(cat_v)                   # smaller = better
+    tkey = desc_sort_key(theta_v)
+    s = jnp.sum(ikey < tkey, axis=1)              # strictly above, <= k-1
+    neg_ids = jnp.where(ikey == tkey, -cat_i.astype(jnp.float32),
+                        -jnp.inf)
+    ti = jax.lax.top_k(neg_ids, k)[0]             # smallest tie ids first
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    fill = cols < (k - s)[:, None]
+    pool_v = jnp.concatenate(
+        [jnp.where(desc_sort_key(va) < tkey, va, -jnp.inf),
+         jnp.where(fill, jnp.broadcast_to(theta_v, ti.shape), -jnp.inf)],
+        axis=1)
+    pool_i = jnp.concatenate(
+        [ia, jnp.where(fill, (-ti).astype(jnp.int32),
+                       jnp.int32(2 ** 31 - 1))], axis=1)
+    _, ii, vv = jax.lax.sort(
+        (desc_sort_key(pool_v), pool_i, pool_v), num_keys=2)
+    return vv[:, :k], ii[:, :k]
 
 
 def _kernel(p_ref, codes_ref, vals_ref, ids_ref, *, m: int, b: int,
@@ -77,6 +149,128 @@ def _kernel(p_ref, codes_ref, vals_ref, ids_ref, *, m: int, b: int,
     v, pos = jax.lax.top_k(cat_v, k)
     vals_ref[...] = v
     ids_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, vals_ref, ids_out_ref,
+                   skip_ref, *, m: int, b: int, k: int, block_n: int,
+                   n_items: int, n_batch: int, tie_break_ids: bool):
+    # p_ref:    [Bt, m, b]   fp32 LUT tile (same block for every n step)
+    # codes_ref:[Nt, m]      int32 codes tile, in sweep order
+    # ids_ref:  [Nt, 1]      int32 ORIGINAL item id of each sweep row
+    # pres_ref: [1, m, b]    fp32 0/1 — code c occurs in this tile, split j
+    # vals_ref / ids_out_ref: [Bt, k] running top-k (revisited across n)
+    # skip_ref: [1, 1]       int32 1 iff this (i, n) tile was skipped
+    i = pl.program_id(0)
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
+        ids_out_ref[...] = jnp.zeros(ids_out_ref.shape, jnp.int32)
+
+    # ---- score-bound: ub[t] = sum_j max{P[j, c] : c present in tile}.
+    # Any item in the tile scores <= ub (its codes are all present), so
+    # when ub cannot beat the running k-th value for ANY query row the
+    # whole gather+accumulate+merge is provably a no-op and is skipped.
+    bt = p_ref.shape[0]
+    ub = jnp.zeros((bt,), jnp.float32)
+    for j in range(m):
+        pj = jnp.where(pres_ref[0, j, :][None, :] > 0, p_ref[:, j, :],
+                       -jnp.inf)
+        ub = ub + jnp.max(pj, axis=1)
+    # padded batch rows must never demand a tile
+    row = i * bt + jax.lax.broadcasted_iota(jnp.int32, (bt,), 0)
+    ub = jnp.where(row < n_batch, ub, -jnp.inf)
+    theta = vals_ref[:, k - 1]
+    # identity sweep: an equal score loses the id tie-break to every
+    # running entry (all from earlier tiles = smaller ids), so strict >
+    # is required to enter.  Under a permutation ties break on original
+    # id, so an equal-score smaller-id item CAN enter: keep >= tiles.
+    need = (jnp.any(ub >= theta) if tie_break_ids
+            else jnp.any(ub > theta))
+    skip_ref[0, 0] = jnp.where(need, 0, 1).astype(jnp.int32)
+
+    @pl.when(need)
+    def _body():
+        centroid_ids = jax.lax.broadcasted_iota(jnp.int32, (b, block_n), 0)
+        acc = jnp.zeros((bt, block_n), jnp.float32)
+        for j in range(m):                  # static unroll over code splits
+            cj = codes_ref[:, j].astype(jnp.int32)
+            onehot = (cj[None, :] == centroid_ids).astype(jnp.float32)
+            acc += jnp.dot(p_ref[:, j, :], onehot,
+                           preferred_element_type=jnp.float32)
+        # N-padding mask is by sweep POSITION (ids are original ids and
+        # arbitrary under a permutation, positions are not)
+        pos = n * block_n + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+        acc = jnp.where(pos < n_items, acc, -jnp.inf)
+        item_ids = jnp.broadcast_to(
+            ids_ref[:, 0].astype(jnp.int32)[None, :], acc.shape)
+        cat_v = jnp.concatenate([vals_ref[...], acc], axis=1)
+        cat_i = jnp.concatenate([ids_out_ref[...], item_ids], axis=1)
+        if tie_break_ids:
+            # (value, id) total order — sweep-order independent, ==
+            # lax.top_k over the materialised matrix.  Portability
+            # note: the int top_k / small variadic sort inside may need
+            # a Mosaic-version check; interpret mode is exact.
+            v, ii = topk_total_order(cat_v, cat_i, k)
+            vals_ref[...] = v
+            ids_out_ref[...] = ii
+        else:
+            v, pos_k = jax.lax.top_k(cat_v, k)
+            vals_ref[...] = v
+            ids_out_ref[...] = jnp.take_along_axis(cat_i, pos_k, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_items", "n_batch",
+                                             "block_b", "block_n",
+                                             "tie_break_ids", "interpret"))
+def jpq_topk_tiles_pruned(partial, codes, ids, present, *, k: int,
+                          n_items: int, n_batch: int, block_b: int = 256,
+                          block_n: int = 512, tie_break_ids: bool = False,
+                          interpret: bool = False):
+    """Score-bound dynamically-pruned variant of ``jpq_topk_tiles``.
+
+    Extra inputs: ``ids [N, 1]`` original item id per sweep row (iota
+    when unpermuted), ``present [N/block_n, m, b]`` 0/1 presence of each
+    code in each tile (built from the UNPADDED codes; padding rows
+    contribute nothing, which only loosens nothing — they are masked by
+    position).  ``n_batch`` is the real (unpadded) batch size.  Returns
+    (values [B, k], ids [B, k], skipped [B/Bt, N/Nt] int32 tile-skip
+    map).  Bit-exact vs the materialise reference: bounds only ever
+    skip tiles that provably cannot enter the top-k."""
+    B, m, b = partial.shape
+    N = codes.shape[0]
+    assert B % block_b == 0 and N % block_n == 0, (B, N, block_b, block_n)
+    assert 0 < k <= n_items <= N, (k, n_items, N)
+    grid = (B // block_b, N // block_n)
+    assert present.shape == (grid[1], m, b), (present.shape, grid)
+    return pl.pallas_call(
+        functools.partial(_kernel_pruned, m=m, b=b, k=k, block_n=block_n,
+                          n_items=n_items, n_batch=n_batch,
+                          tie_break_ids=tie_break_ids),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m, b), lambda i, n: (i, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda i, n: (n, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, n: (n, 0)),
+            pl.BlockSpec((1, m, b), lambda i, n: (n, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, k), lambda i, n: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, n: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, n: (i, n)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="jpq_topk_pruned",
+    )(partial.astype(jnp.float32), codes.astype(jnp.int32),
+      ids.astype(jnp.int32), present.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_items", "block_b",

@@ -17,20 +17,93 @@ Three backends behind one call:
 All entrypoints clamp ``k`` to ``min(k, N)`` (lax.top_k on the
 materialised matrix would reject k > N) and handle N not a multiple of
 block_n by masking padded columns to −inf against the real N.
+
+Dynamic pruning (``prune=``): per-tile score upper bounds from the
+query LUT skip tiles that provably cannot enter the top-k — see
+``prepare_pruning`` and docs/serving.md.  ``prune=True`` builds the
+(query-independent) presence mask inline; serving replicas should
+build a ``PruneState`` ONCE via ``prepare_pruning`` and pass it, so
+the per-request jit does none of that O(N·m) work.  Results are
+bit-exact vs the unpruned path in every mode, permuted or not.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.jpq_scores.ops import _ceil_mult, _on_tpu
-from repro.kernels.jpq_topk.jpq_topk import jpq_topk_tiles
+from repro.kernels.jpq_topk.jpq_topk import (desc_sort_key,  # noqa: F401
+                                             jpq_topk_tiles,
+                                             jpq_topk_tiles_pruned,
+                                             topk_total_order)
+
+
+class PruneState(NamedTuple):
+    """Query-independent pruning inputs for one (codes, block_n) pair.
+
+    codes   [N, m] int32   codebook rows in SWEEP order (permuted when a
+                           popularity permutation is in play)
+    ids     [N]    int32   original item id of each sweep row
+    present [nt, m, b] f32 0/1 — code c occurs in tile t, split j
+    block_n int            tile size ``present`` was built for
+    tie_break_ids bool     sweep order != ascending id (permuted): merges
+                           must tie-break on original id explicitly
+    """
+    codes: jnp.ndarray
+    ids: jnp.ndarray
+    present: jnp.ndarray
+    block_n: int
+    tie_break_ids: bool
+
+
+def prepare_pruning(codes, b: int, block_n: int, perm=None) -> PruneState:
+    """Build the per-tile code-presence mask (and optional sweep
+    permutation) for score-bound pruning.  O(N·m) scatter, codes-only —
+    compute once per (codes, block_n), NOT per query."""
+    codes = jnp.asarray(codes).astype(jnp.int32)
+    N, m = codes.shape
+    if perm is None:
+        ids = jnp.arange(N, dtype=jnp.int32)
+        sweep = codes
+    else:
+        # permuted merges route tie ids through an f32 top_k
+        # (topk_total_order) — exact only while ids fit in f32
+        assert N < 2 ** 24, f"permuted pruning caps at 2^24 ids, N={N}"
+        ids = jnp.asarray(perm).astype(jnp.int32)
+        assert ids.shape == (N,), (ids.shape, N)
+        sweep = jnp.take(codes, ids, axis=0)
+    nt = -(-N // block_n)
+    tile = (jnp.arange(N, dtype=jnp.int32) // block_n)[:, None]
+    split = jnp.arange(m, dtype=jnp.int32)[None, :]
+    present = jnp.zeros((nt, m, b), jnp.float32)
+    present = present.at[jnp.broadcast_to(tile, (N, m)),
+                         jnp.broadcast_to(split, (N, m)), sweep].set(1.0)
+    return PruneState(sweep, ids, present, int(block_n), perm is not None)
+
+
+def _resolve_prune(prune, perm, codes, b: int, block_n: int):
+    """True/PruneState -> a PruneState matching ``block_n`` (rebuilding
+    the presence mask if it was prepared for a different tile size).
+
+    Rebuild re-tiles the presence mask over ``prune.codes`` — which are
+    ALREADY in sweep order — and keeps the stored ids: passing
+    ``prune.ids`` back through ``prepare_pruning``'s perm would permute
+    a second time and serve scores under the wrong item ids."""
+    if isinstance(prune, PruneState):
+        if prune.block_n == block_n:
+            return prune
+        st = prepare_pruning(prune.codes, b, block_n)
+        return PruneState(st.codes, prune.ids, st.present, block_n,
+                          prune.tie_break_ids)
+    return prepare_pruning(codes, b, block_n, perm=perm)
 
 
 def jpq_topk(h, centroids, codes, k: int, *, block_b: int = 256,
-             block_n: int | None = None, backend: str | None = None):
+             block_n: int | None = None, backend: str | None = None,
+             prune: Union[bool, PruneState, None] = None, perm=None):
     """h [..., d], centroids [m, b, dk], codes [N, m] ->
     (values, ids) [..., min(k, N)] — top-k catalogue retrieval without
     materialising the [..., N] score matrix."""
@@ -42,38 +115,77 @@ def jpq_topk(h, centroids, codes, k: int, *, block_b: int = 256,
     h2 = h.reshape(B, m, dk).astype(jnp.float32)
     partial = jnp.einsum("bmk,mck->bmc", h2, centroids.astype(jnp.float32))
     v, i = jpq_topk_lut(partial, codes, k, block_b=block_b,
-                        block_n=block_n, backend=backend)
+                        block_n=block_n, backend=backend, prune=prune,
+                        perm=perm)
     return v.reshape(*lead, -1), i.reshape(*lead, -1)
 
 
 def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
-                 block_n: int | None = None, backend: str | None = None):
+                 block_n: int | None = None, backend: str | None = None,
+                 prune: Union[bool, PruneState, None] = None, perm=None,
+                 return_stats: bool = False):
     """partial [B, m, b] fp32, codes [N, m] -> (values, ids)
     [B, min(k, N)].  block_n=None picks the backend's native tile:
     VMEM-sized (512) for the kernel, a dispatch-amortising near-divisor
-    of N around _SCAN_BLOCK_N (131072) for the XLA scan."""
+    of N around _SCAN_BLOCK_N (131072) for the XLA scan; pruned scans
+    default to _PRUNE_BLOCK_N (8192) so the bound has tiles to skip.
+
+    ``prune``: falsy = the PR 2 paths, True = build a PruneState inline,
+    or a precomputed ``prepare_pruning(...)`` result.  ``perm``: optional
+    [N] sweep permutation (original item id per sweep position; only
+    meaningful with prune).  ``return_stats=True`` appends a dict with
+    ``skipped_tiles`` / ``total_tiles`` (jnp scalars; pruned paths only).
+    """
     if backend is None:
         backend = "pallas" if _on_tpu() else "scan"
     B, m, b = partial.shape
     N = codes.shape[0]
     k = min(int(k), N)
     assert k > 0 and backend in ("pallas", "interpret", "scan"), (k, backend)
+    if not prune:
+        assert not return_stats, "stats are a pruned-path feature"
+        if backend == "scan":
+            bn = block_n or scan_block_n(N)
+            return _jpq_topk_scan(partial.astype(jnp.float32),
+                                  codes.astype(jnp.int32), k=k,
+                                  block_n=min(bn, _ceil_mult(N, 128)))
+        bb = min(block_b, _ceil_mult(B, 8))
+        bn = min(block_n or 512, _ceil_mult(N, 128))
+        Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, bn)
+        partial = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
+        codes_p = jnp.pad(codes.astype(jnp.int32), ((0, Np - N), (0, 0)))
+        v, i = jpq_topk_tiles(partial, codes_p, k=k, n_items=N, block_b=bb,
+                              block_n=bn, interpret=backend == "interpret")
+        return v[:B], i[:B]
+
     if backend == "scan":
-        bn = block_n or scan_block_n(N)
-        return _jpq_topk_scan(partial.astype(jnp.float32),
-                              codes.astype(jnp.int32), k=k,
-                              block_n=min(bn, _ceil_mult(N, 128)))
-    bb = min(block_b, _ceil_mult(B, 8))
-    bn = min(block_n or 512, _ceil_mult(N, 128))
-    Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, bn)
-    partial = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
-    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, Np - N), (0, 0)))
-    v, i = jpq_topk_tiles(partial, codes_p, k=k, n_items=N, block_b=bb,
-                          block_n=bn, interpret=backend == "interpret")
-    return v[:B], i[:B]
+        bn = min(block_n or prune_block_n(N), _ceil_mult(N, 128))
+        st = _resolve_prune(prune, perm, codes, b, bn)
+        v, i, skipped, total = _jpq_topk_scan_pruned(
+            partial.astype(jnp.float32), st.codes, st.ids, st.present,
+            k=k, block_n=bn, tie_break_ids=st.tie_break_ids)
+    else:
+        bb = min(block_b, _ceil_mult(B, 8))
+        bn = min(block_n or 512, _ceil_mult(N, 128))
+        st = _resolve_prune(prune, perm, codes, b, bn)
+        Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, bn)
+        partial_p = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
+        codes_p = jnp.pad(st.codes, ((0, Np - N), (0, 0)))
+        ids_p = jnp.pad(st.ids, (0, Np - N))[:, None]
+        v, i, skips = jpq_topk_tiles_pruned(
+            partial_p, codes_p, ids_p, st.present, k=k, n_items=N,
+            n_batch=B, block_b=bb, block_n=bn,
+            tie_break_ids=st.tie_break_ids,
+            interpret=backend == "interpret")
+        v, i = v[:B], i[:B]
+        skipped, total = jnp.sum(skips), skips.size
+    if return_stats:
+        return v, i, {"skipped_tiles": skipped, "total_tiles": total}
+    return v, i
 
 
 _SCAN_BLOCK_N = 131072
+_PRUNE_BLOCK_N = 8192
 
 
 def scan_block_n(N: int, target: int = _SCAN_BLOCK_N) -> int:
@@ -82,6 +194,14 @@ def scan_block_n(N: int, target: int = _SCAN_BLOCK_N) -> int:
     half-empty block of wasted gathers."""
     nb = max(1, round(N / target))
     return _ceil_mult(-(-N // nb), 128)
+
+
+def prune_block_n(N: int, target: int = _PRUNE_BLOCK_N) -> int:
+    """Pruned-scan tile size.  Bounds need granularity to bite: at the
+    unpruned ~128k tile every one of the b codes occurs in every tile,
+    the presence mask saturates, and no tile can ever be skipped — so
+    pruned sweeps default to ~8k tiles (still >> merge cost)."""
+    return scan_block_n(N, target)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n"))
@@ -121,3 +241,66 @@ def _jpq_topk_scan(partial, codes, *, k: int, block_n: int):
     cat_i = jnp.swapaxes(is_, 0, 1).reshape(B, nb * kb)
     v, pos = jax.lax.top_k(cat_v, k)
     return v, jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n",
+                                             "tie_break_ids"))
+def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
+                          block_n: int, tie_break_ids: bool):
+    """Score-bound pruned sweep as plain XLA: a lax.scan carrying the
+    running (values, ids) top-k, each block step ``cond``-guarded on the
+    tile bound beating the running k-th value.
+
+    Unlike ``_jpq_topk_scan`` there is no deferred merge — the carry IS
+    the global top-k after every step, which is what makes a threshold
+    exist to prune against.  Exactness: an item's score is bounded by
+    ``Σ_j max{P[j, c] : c in its tile}``; a skipped tile therefore
+    cannot contribute an entry (strictly-below threshold, or tied — and
+    ties lose to the smaller-id entries already in the list when the
+    sweep is ascending; under a permutation the merge tie-breaks on
+    original id, so only strictly-below tiles are skipped)."""
+    B, m, b = partial.shape
+    N = codes.shape[0]
+    Np = _ceil_mult(N, block_n)
+    nb = Np // block_n
+    blocks = jnp.pad(codes, ((0, Np - N), (0, 0))).reshape(nb, block_n, m)
+    id_blocks = jnp.pad(ids, (0, Np - N)).reshape(nb, block_n)
+    starts = jnp.arange(nb, dtype=jnp.int32) * block_n
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
+            jnp.zeros((B, k), jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+    def step(carry, xs):
+        vals, idx, nskip = carry
+        cb, ib, pres, n0 = xs            # [Nt, m], [Nt], [m, b], scalar
+        theta = vals[:, -1]
+        ub = jnp.zeros((B,), jnp.float32)
+        for j in range(m):
+            pj = jnp.where(pres[j][None, :] > 0, partial[:, j, :],
+                           -jnp.inf)
+            ub = ub + jnp.max(pj, axis=1)
+        need = (jnp.any(ub >= theta) if tie_break_ids
+                else jnp.any(ub > theta))
+
+        def do(args):
+            vals, idx = args
+            s = jnp.take(partial[:, 0, :], cb[:, 0], axis=1)  # [B, Nt]
+            for j in range(1, m):
+                s = s + jnp.take(partial[:, j, :], cb[:, j], axis=1)
+            pos = n0 + jnp.arange(block_n, dtype=jnp.int32)
+            s = jnp.where(pos[None, :] < N, s, -jnp.inf)
+            cat_v = jnp.concatenate([vals, s], axis=1)
+            cat_i = jnp.concatenate(
+                [idx, jnp.broadcast_to(ib[None, :], s.shape)], axis=1)
+            if tie_break_ids:
+                # (value, id) total order without a wide variadic sort
+                return topk_total_order(cat_v, cat_i, k)
+            v, p = jax.lax.top_k(cat_v, k)
+            return v, jnp.take_along_axis(cat_i, p, axis=1)
+
+        vals, idx = jax.lax.cond(need, do, lambda a: a, (vals, idx))
+        return (vals, idx, nskip + 1 - need.astype(jnp.int32)), None
+
+    (v, i, nskip), _ = jax.lax.scan(
+        step, init, (blocks, id_blocks, present, starts))
+    return v, i, nskip, jnp.asarray(nb, jnp.int32)

@@ -60,6 +60,10 @@ def main():
                     default=True,
                     help="fused PQTopK serve path for retrieval archs "
                          "(--no-fused: materialise-then-top-k reference)")
+    ap.add_argument("--prune", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="score-bound dynamic pruning of code tiles on "
+                         "the fused path (bit-exact; docs/serving.md)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -79,8 +83,23 @@ def main():
 
     if hasattr(model, "retrieve"):
         kw = {"top_k": args.top_k}
-        if "fused" in inspect.signature(model.retrieve).parameters:
+        sig = inspect.signature(model.retrieve).parameters
+        if "fused" in sig:
             kw["fused"] = args.fused
+        if "prune" in sig and args.prune:
+            # serving protocol (docs/serving.md): the presence mask is
+            # codes-only — build the PruneState ONCE here, outside the
+            # per-request jit, so the latency loop measures the bound
+            # test and not an O(N·m) rebuild per request
+            kw["prune"] = True
+            emb = getattr(model, "emb", None)
+            if emb is not None and emb.cfg.kind == "jpq" \
+                    and "item_emb" in params:
+                from repro.kernels.jpq_topk import ops as _tops
+                codes = params["item_emb"]["codes"].value
+                kw["prune"] = _tops.prepare_pruning(
+                    codes, emb.cfg.b,
+                    _tops.prune_block_n(codes.shape[0]))
         fn = jax.jit(lambda p, b: model.retrieve(p, b, **kw))
     else:
         fn = jax.jit(model.serve)
@@ -101,6 +120,8 @@ def main():
     lats = np.asarray(lats)
     mode = ("fused" if args.fused else "materialise") \
         if hasattr(model, "retrieve") else "serve"
+    if mode == "fused" and args.prune:
+        mode = "fused+prune"
     print(f"{args.arch}: batch={args.batch_size} n={args.requests} "
           f"path={mode} seed={args.seed} "
           f"p50={np.percentile(lats, 50):.2f}ms "

@@ -113,17 +113,20 @@ class TwoTower:
                        == jnp.arange(b)[None, :])
         return loss, {"loss": loss, "in_batch_acc": acc}
 
-    def retrieve(self, p, batch, *, top_k: int = 100, fused: bool = True):
+    def retrieve(self, p, batch, *, top_k: int = 100, fused: bool = True,
+                 prune=None, perm=None):
         """Score user(s) against the full catalogue; returns top-k.
         With kind="jpq" the catalogue read is m bytes/item (codes) not
         4d — and the default fused path (core.serve.retrieve_topk)
         merges scoring with a running top-k so the [B, n_rows] score
         matrix is never materialised.  fused=False keeps the
-        materialise-then-hierarchical-top-k reference path."""
+        materialise-then-hierarchical-top-k reference path; ``prune``
+        additionally skips code tiles whose score bound cannot reach
+        the running top-k (bit-exact, docs/serving.md)."""
         from repro.core import serve
         u = self.user_vec(p, batch["user_hist"])           # [B, d]
         return serve.retrieve_topk(self.emb, p["item_emb"], u, k=top_k,
-                                   fused=fused)
+                                   fused=fused, prune=prune, perm=perm)
 
     def bulk_retrieve(self, p, batch, *, top_k: int = 100,
                       chunk: int = 2048):

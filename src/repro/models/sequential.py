@@ -187,10 +187,48 @@ class SeqRecModel:
         return logits.at[..., 0].set(NEG_INF).at[..., -1].set(NEG_INF)
 
     # ------------------------------------------------------------ serve
+    def _serve_seq(self, seq):
+        """Query-position protocol: bert4rec predicts at a [MASK]
+        appended after the history (the paper's next-item inference);
+        causal archs query the last position of the history itself."""
+        if self.cfg.arch != "bert4rec":
+            return seq
+        mask_col = jnp.full((seq.shape[0], 1), self.cfg.mask_id, seq.dtype)
+        return jnp.concatenate([seq[:, 1:], mask_col], axis=1)
+
     def score_last(self, p, seq):
         """Rank the full catalogue from the last position: [B, n_rows]."""
-        h = self.encode(p, seq)
+        h = self.encode(p, self._serve_seq(seq))
         return self._mask_special(self.emb.logits(p["item_emb"], h[:, -1]))
+
+    def retrieve_topk(self, p, seq, *, k: int, fused: bool = True,
+                      prune=None, perm=None, block_n=None, backend=None):
+        """Top-k catalogue retrieval from the last position WITHOUT
+        materialising the [B, n_rows] score matrix ``score_last``
+        builds: JPQ heads route through the fused PQTopK path
+        (core.serve.retrieve_topk, optionally score-bound pruned);
+        full/QR heads fall back to materialise + hierarchical top-k.
+        Bit-equal to ``lax.top_k(score_last(p, seq), k)`` — pad and
+        [MASK] rows are demoted to the same NEG_INF, and the candidate
+        re-rank tie-breaks on item id like a stable top-k."""
+        from repro.core import serve
+        n_rows = self.cfg.n_rows
+        k_out = min(int(k), n_rows)
+        h = self.encode(p, self._serve_seq(seq))
+        # two extra candidates cover the pad + [MASK] rows that the
+        # materialised path masks before its top-k
+        v, i = serve.retrieve_topk(
+            self.emb, p["item_emb"], h[:, -1], k=min(k_out + 2, n_rows),
+            fused=fused, prune=prune, perm=perm, block_n=block_n,
+            backend=backend)
+        forbidden = (i == 0) | (i == n_rows - 1)
+        v = jnp.where(forbidden, NEG_INF, v)
+        # stable (value desc, id asc) re-rank; the bit-level key
+        # reproduces lax.top_k's total order (incl. ±0.0), so this
+        # equals a top_k over the masked materialised scores
+        from repro.kernels.jpq_topk.jpq_topk import desc_sort_key
+        _, ids, vv = jax.lax.sort((desc_sort_key(v), i, v), num_keys=2)
+        return vv[..., :k_out], ids[..., :k_out]
 
 
 def _xent(logits, labels):
@@ -203,11 +241,20 @@ def _xent(logits, labels):
 # --------------------------------------------------- bert4rec masking
 
 def mask_batch(rng, seq, mask_prob: float, mask_id: int):
-    """Cloze-mask a batch for BERT4Rec: returns (masked_seq, targets)."""
+    """Cloze-mask a batch for BERT4Rec: returns (masked_seq, targets).
+
+    The final real item of every row is always masked (the paper
+    evaluates next-item, so the model must train on the last position)
+    — which also guarantees every non-empty row has at least one
+    target even on an unlucky Bernoulli draw."""
     r = jax.random.uniform(rng, seq.shape)
     is_item = seq > 0
-    do_mask = (r < mask_prob) & is_item
-    # always predict the final item too (paper evaluates next-item)
+    S = seq.shape[1]
+    # last real position per row (sequences are left-padded, but don't
+    # rely on it): highest index with a non-pad item
+    last = S - 1 - jnp.argmax(jnp.flip(is_item, axis=1), axis=1)
+    force = (jnp.arange(S)[None, :] == last[:, None]) & is_item
+    do_mask = ((r < mask_prob) | force) & is_item
     masked = jnp.where(do_mask, mask_id, seq)
     targets = jnp.where(do_mask, seq, 0)
     return masked, targets

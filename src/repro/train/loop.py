@@ -76,30 +76,35 @@ class Trainer:
 
         def train_step(values, opt_state, batch, rng):
             if nmicro > 1:
-                def micro(i, acc):
-                    g_acc, loss_acc = acc
+                # rng is folded per microbatch — accumulation slices
+                # must not share dropout masks — and the full metrics
+                # dict rides through the scan ys (mean over slices),
+                # instead of collapsing to {"loss"}.
+                def micro(g_acc, i):
                     mb = jax.tree.map(
                         lambda x: jax.lax.dynamic_slice_in_dim(
                             x, i * (x.shape[0] // nmicro),
                             x.shape[0] // nmicro), batch)
-                    g, mb_mets = grad_fn(values, mb, rng)
+                    g, mb_mets = grad_fn(values, mb,
+                                         jax.random.fold_in(rng, i))
                     g_acc = jax.tree.map(
                         lambda a, b: a + jnp.asarray(b, a.dtype)
                         if jnp.issubdtype(jnp.asarray(a).dtype,
                                           jnp.floating) and a.size
                         else a, g_acc, g)
-                    return (g_acc, loss_acc + mb_mets["loss"] / nmicro)
+                    return g_acc, mb_mets
                 zeros = jax.tree.map(
                     lambda v: jnp.zeros(v.shape, jnp.float32)
                     if jnp.issubdtype(v.dtype, jnp.floating)
                     else jnp.zeros((0,)), values)
-                grads, loss = jax.lax.fori_loop(
-                    0, nmicro, micro, (zeros, jnp.zeros((), jnp.float32)))
+                grads, mets_stack = jax.lax.scan(
+                    micro, zeros, jnp.arange(nmicro))
                 grads = jax.tree.map(
                     lambda g: g / nmicro
                     if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating)
                     and g.size else g, grads)
-                mets = {"loss": loss}
+                mets = jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                    mets_stack)
             else:
                 grads, mets = grad_fn(values, batch, rng)
             new_values, new_state, stats = apply_updates(
@@ -151,6 +156,13 @@ class Trainer:
             train_step = jax.jit(train_step, donate_argnums=(0, 1))
 
         best_metric, stale = -np.inf, 0
+        # the final checkpoint must be stamped with the step actually
+        # reached: stamping cfg.steps after a preemption/early-stop
+        # break made resume restore AT cfg.steps and skip the remaining
+        # training entirely.  done_step tracks reality; last_saved
+        # prevents the trailing save from duplicating a periodic or
+        # preemption save at the same step.
+        done_step, last_saved = start_step, None
         ctx = (dist.use_mesh_rules(self.mesh, self.rules)
                if self.mesh is not None else _nullctx())
         with ctx:
@@ -160,6 +172,7 @@ class Trainer:
                 srng = jax.random.fold_in(rng, step)
                 values, opt_state, mets = train_step(
                     values, opt_state, batch, srng)
+                done_step = step + 1
                 dt = time.perf_counter() - t0
                 self._watchdog(step, dt)
                 if step % cfg.log_every == 0 or step == cfg.steps - 1:
@@ -170,11 +183,13 @@ class Trainer:
                         (step + 1) % cfg.ckpt_every == 0:
                     ckpt.save({"values": values, "opt": opt_state},
                               step + 1)
+                    last_saved = step + 1
                 if self._preempted:
-                    if ckpt:
+                    if ckpt and last_saved != step + 1:
                         ckpt.save({"values": values, "opt": opt_state},
                                   step + 1)
                         ckpt.wait()
+                        last_saved = step + 1
                     break
                 if self.eval_fn and cfg.eval_every and \
                         (step + 1) % cfg.eval_every == 0:
@@ -191,8 +206,9 @@ class Trainer:
                             if stale >= cfg.early_stop_patience:
                                 break
         if ckpt:
-            ckpt.save({"values": values, "opt": opt_state}, cfg.steps)
-            ckpt.wait()
+            if last_saved != done_step:
+                ckpt.save({"values": values, "opt": opt_state}, done_step)
+            ckpt.wait()                    # drain the async writer
         return nn.with_values(params_meta, values), self.history
 
     def _watchdog(self, step, dt):

@@ -2,7 +2,7 @@
 
 The test suite uses a small slice of the API (``given``, ``settings``
 profiles, ``st.integers`` / ``st.sampled_from`` / ``st.tuples`` /
-``st.booleans`` / ``st.composite``).
+``st.booleans`` / ``st.floats`` / ``st.lists`` / ``st.composite``).
 This stub replays each ``@given`` test over ``max_examples``
 deterministic pseudo-random draws — no shrinking, no database — so the
 property tests still execute in environments where hypothesis cannot
@@ -44,6 +44,19 @@ def tuples(*strategies):
 
 def booleans():
     return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo = float(min_value)
+    hi = float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example_from(rng) for _ in range(n)]
+    return _Strategy(sample)
 
 
 def composite(fn):
@@ -103,6 +116,8 @@ def install():
     st.sampled_from = sampled_from
     st.tuples = tuples
     st.booleans = booleans
+    st.floats = floats
+    st.lists = lists
     st.composite = composite
     hyp.strategies = st
     sys.modules["hypothesis"] = hyp

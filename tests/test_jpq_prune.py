@@ -1,0 +1,247 @@
+"""Parity harness for score-bound dynamic pruning of the fused PQTopK
+serve path.
+
+Pruning must be invisible in the results: a tile is skipped only when
+its score upper bound (Σ_j max over codes present in the tile of the
+query LUT) provably cannot enter the running top-k — so every test
+here asserts BIT-EXACT values and tie-broken ids against the
+materialise-then-top-k reference, identical to the PR 2 harness, on
+the interpret (Pallas) and scan backends, unpermuted and under
+adversarial sweep permutations.  The skip *stats* are asserted
+separately: structured catalogues must actually skip, k == N must
+never skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.jpq_topk.ops import (jpq_topk_lut, prepare_pruning,
+                                        prune_block_n)
+from repro.kernels.jpq_topk.ref import jpq_topk_lut_ref
+
+settings.register_profile("jp", max_examples=10, deadline=None)
+settings.load_profile("jp")
+
+BACKENDS = ["interpret", "scan"]
+
+
+def _rand_case(seed, B, m, b, N, *, integer=False):
+    k = jax.random.PRNGKey(seed)
+    if integer:
+        partial = jax.random.randint(jax.random.fold_in(k, 1), (B, m, b),
+                                     0, 3).astype(jnp.float32)
+    else:
+        partial = jax.random.normal(jax.random.fold_in(k, 1), (B, m, b))
+    codes = jax.random.randint(jax.random.fold_in(k, 2), (N, m), 0, b,
+                               jnp.int32)
+    return partial, codes
+
+
+def _assert_exact(v, i, rv, ri, msg=""):
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv),
+                                  err_msg=f"{msg} values")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri),
+                                  err_msg=f"{msg} ids")
+
+
+class TestPrunedParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("B,m,b,N,k,bn", [
+        (1, 1, 2, 7, 3, 512),       # tiny, N << block_n
+        (3, 2, 16, 100, 10, 512),
+        (5, 4, 32, 1000, 50, 128),  # N not a multiple of block_n
+        (2, 2, 8, 513, 200, 128),   # last tile is 1 item wide
+        (9, 3, 64, 300, 300, 128),  # k == N
+    ])
+    def test_exact(self, backend, B, m, b, N, k, bn):
+        partial, codes = _rand_case(B * N + k, B, m, b, N)
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        v, i = jpq_topk_lut(partial, codes, k, block_n=bn,
+                            backend=backend, prune=True)
+        _assert_exact(v, i, rv, ri, f"{backend} pruned")
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_exact_under_permutation(self, backend):
+        """Reversed sweep = every later-id item is seen FIRST — the
+        adversarial order for tie-breaking."""
+        partial, codes = _rand_case(11, 3, 2, 8, 260, integer=True)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 40)
+        N = codes.shape[0]
+        for perm in (jnp.arange(N, dtype=jnp.int32)[::-1],
+                     jnp.asarray(np.random.default_rng(0)
+                                 .permutation(N), jnp.int32)):
+            v, i = jpq_topk_lut(partial, codes, 40, block_n=64,
+                                backend=backend, prune=True, perm=perm)
+            _assert_exact(v, i, rv, ri, f"{backend} permuted")
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_k_larger_than_n_clamps(self, backend):
+        partial, codes = _rand_case(0, 2, 2, 8, 5)
+        v, i = jpq_topk_lut(partial, codes, 9, block_n=512,
+                            backend=backend, prune=True)
+        assert v.shape == i.shape == (2, 5)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 9)
+        _assert_exact(v, i, rv, ri)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_k_equals_n_prunes_nothing(self, backend):
+        """With k == N every item is in the top-k, so no tile may ever
+        be skipped — the threshold stays -inf until the list holds all
+        N items, which only happens after the last tile."""
+        partial, codes = _rand_case(5, 2, 2, 8, 300)
+        v, i, stats = jpq_topk_lut(partial, codes, 300, block_n=64,
+                                   backend=backend, prune=True,
+                                   return_stats=True)
+        assert int(stats["skipped_tiles"]) == 0
+        rv, ri = jpq_topk_lut_ref(partial, codes, 300)
+        _assert_exact(v, i, rv, ri)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_all_tiles_pruned_but_first(self, backend):
+        """Tile 0 holds every high-scoring code: after it the running
+        k-th value exceeds every later tile's bound, so exactly
+        n_tiles - 1 tiles are skipped and the result is untouched."""
+        bn, N, m, b, k = 128, 512, 2, 4, 16
+        codes = np.ones((N, m), np.int32)
+        codes[:bn] = 0                        # tile 0: the hot code
+        codes[2 * bn:3 * bn] = 2
+        codes[3 * bn:] = 3
+        codes = jnp.asarray(codes)
+        partial = jnp.tile(
+            jnp.asarray([10.0, -10.0, -11.0, -12.0])[None, None, :],
+            (3, m, 1))
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        v, i, stats = jpq_topk_lut(partial, codes, k, block_n=bn,
+                                   backend=backend, prune=True,
+                                   return_stats=True)
+        _assert_exact(v, i, rv, ri)
+        assert int(stats["total_tiles"]) == 4
+        assert int(stats["skipped_tiles"]) == 3
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_tight_bounds_massive_ties(self, backend):
+        """Integer LUT with 2 levels: bounds routinely EQUAL the
+        running k-th value; an equal bound must only be skipped when no
+        equal-score item could win its tie-break."""
+        key = jax.random.PRNGKey(3)
+        partial = jax.random.randint(jax.random.fold_in(key, 1),
+                                     (4, 2, 4), 0, 2).astype(jnp.float32)
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (200, 2),
+                                   0, 4, jnp.int32)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 20)
+        v, i = jpq_topk_lut(partial, codes, 20, block_n=64,
+                            backend=backend, prune=True)
+        _assert_exact(v, i, rv, ri)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_structured_catalogue_actually_skips(self, backend):
+        """Popularity-structured codes + popularity-permuted sweep: the
+        acceptance property — a real skip fraction, still bit-exact."""
+        N, m, b, B, k = 4096, 4, 32, 4, 32
+        key = jax.random.PRNGKey(0)
+        rank = jax.random.permutation(jax.random.fold_in(key, 1),
+                                      N).astype(jnp.int32)
+        codes = jnp.clip((rank[:, None].astype(jnp.int64) * b) // N
+                         + jax.random.randint(jax.random.fold_in(key, 2),
+                                              (N, m), 0, 2),
+                         0, b - 1).astype(jnp.int32)
+        partial = (-(jnp.arange(b) / b)[None, None, :] * 4.0
+                   + 0.1 * jax.random.normal(jax.random.fold_in(key, 3),
+                                             (B, m, b)))
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        perm = jnp.argsort(rank).astype(jnp.int32)
+        skipped = {}
+        for name, pm in [("identity", None), ("popularity", perm)]:
+            v, i, stats = jpq_topk_lut(partial, codes, k, block_n=256,
+                                       backend=backend, prune=True,
+                                       perm=pm, return_stats=True)
+            _assert_exact(v, i, rv, ri, name)
+            skipped[name] = int(stats["skipped_tiles"])
+            assert int(stats["total_tiles"]) == 16
+        assert skipped["popularity"] > 0
+        # popularity order tightens the threshold at least as early
+        assert skipped["popularity"] >= skipped["identity"]
+
+    def test_prune_state_precompute_and_rebuild(self):
+        partial, codes = _rand_case(7, 3, 4, 16, 400)
+        st8 = prepare_pruning(codes.astype(jnp.uint8), 16, 128)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 17)
+        for backend in BACKENDS:
+            v, i = jpq_topk_lut(partial, codes, 17, block_n=128,
+                                backend=backend, prune=st8)
+            _assert_exact(v, i, rv, ri, "precomputed state")
+            # mismatched block_n must rebuild, not mis-tile
+            v, i = jpq_topk_lut(partial, codes, 17, block_n=64,
+                                backend=backend, prune=st8)
+            _assert_exact(v, i, rv, ri, "rebuilt state")
+
+    def test_permuted_state_rebuild_does_not_repermute(self):
+        """Rebuilding a popularity-permuted PruneState for a different
+        tile size must keep the stored sweep: re-applying the stored
+        perm to the already-permuted codes serves scores under wrong
+        item ids (values coincide — items are only relabelled — so
+        only the id assertion catches it)."""
+        partial, codes = _rand_case(13, 3, 4, 16, 400)
+        perm = jnp.asarray(np.random.default_rng(5).permutation(400),
+                           jnp.int32)
+        st_ = prepare_pruning(codes, 16, 64, perm=perm)
+        rv, ri = jpq_topk_lut_ref(partial, codes, 17)
+        for backend in BACKENDS:
+            for bn in (64, 128):           # match, then forced rebuild
+                v, i = jpq_topk_lut(partial, codes, 17, block_n=bn,
+                                    backend=backend, prune=st_)
+                _assert_exact(v, i, rv, ri,
+                              f"{backend} bn={bn} permuted state")
+
+    def test_presence_mask_matches_numpy(self):
+        codes = jnp.asarray(np.random.default_rng(1)
+                            .integers(0, 8, (300, 3)), jnp.int32)
+        st_ = prepare_pruning(codes, 8, 128)
+        ref = np.zeros((3, 3, 8), np.float32)
+        cn = np.asarray(codes)
+        for idx in range(300):
+            for j in range(3):
+                ref[idx // 128, j, cn[idx, j]] = 1.0
+        np.testing.assert_array_equal(np.asarray(st_.present), ref)
+        np.testing.assert_array_equal(np.asarray(st_.ids), np.arange(300))
+
+    def test_default_prune_block_n_has_tiles(self):
+        assert prune_block_n(1_000_000) < 20_000
+        assert prune_block_n(100) == 128
+
+
+class TestPrunedPropertySweep:
+    @given(st.integers(1, 400), st.sampled_from([1, 2, 4]),
+           st.sampled_from([2, 16, 64]),
+           st.tuples(st.integers(1, 5), st.integers(1, 64)),
+           st.sampled_from([64, 128]), st.booleans(),
+           st.floats(0.0, 2.0))
+    def test_random_shapes(self, N, m, b, Bk, bn, use_perm, scale):
+        """Quantised LUTs (scale rounds to few distinct levels) make
+        bounds adversarially tight; random permutations break every
+        sweep-order assumption a buggy merge could hide behind.
+        -0.0 entries are canonicalised away: the kernel's one-hot MXU
+        contraction sums them to +0.0 while the gather reference keeps
+        the sign, and lax.top_k's IEEE total order distinguishes ±0.0
+        — a (documented) domain caveat of the fused formulation, not a
+        pruning property."""
+        B, k = Bk
+        key = jax.random.PRNGKey(N * 31 + m * 7 + B + k)
+        partial = jnp.round(
+            jax.random.normal(jax.random.fold_in(key, 1), (B, m, b))
+            * scale)
+        partial = jnp.where(partial == 0.0, 0.0, partial)
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (N, m),
+                                   0, b, jnp.int32)
+        perm = None
+        if use_perm:
+            perm = jnp.asarray(np.random.default_rng(N + k)
+                               .permutation(N), jnp.int32)
+        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        for backend in BACKENDS:
+            v, i = jpq_topk_lut(partial, codes, k, block_n=bn,
+                                backend=backend, prune=True, perm=perm)
+            _assert_exact(v, i, rv, ri,
+                          f"{backend} perm={use_perm} scale={scale}")

@@ -55,6 +55,57 @@ class TestSequentialBackbones:
         assert float(s[:, 0].max()) <= -1e8           # pad row
         assert float(s[:, -1].max()) <= -1e8          # [MASK] row
 
+    @pytest.mark.parametrize("arch", ["sasrec", "bert4rec", "gru4rec"])
+    def test_retrieve_topk_matches_score_last(self, arch):
+        """The fused serve entry must equal lax.top_k over the
+        materialised score_last matrix — values AND tie-broken ids —
+        with and without pruning, for JPQ heads."""
+        cfg = SeqRecConfig(arch=arch, n_items=50, max_len=8, d_model=32,
+                           n_layers=1, n_heads=2, d_ff=64,
+                           embedding=EmbeddingConfig(0, 0, kind="jpq",
+                                                     m=4, b=8))
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        rv, ri = jax.lax.top_k(m.score_last(p, self.SEQ), 10)
+        for kw in ({}, {"prune": True}, {"fused": False}):
+            v, i = m.retrieve_topk(p, self.SEQ, k=10, **kw)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri),
+                                          err_msg=str(kw))
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv),
+                                          err_msg=str(kw))
+
+    def test_retrieve_topk_full_kind_and_k_clamp(self):
+        cfg = SeqRecConfig(arch="sasrec", n_items=20, max_len=8,
+                           d_model=16, n_layers=1, n_heads=2, d_ff=32)
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        scores = m.score_last(p, self.SEQ)
+        rv, ri = jax.lax.top_k(scores, scores.shape[-1])
+        v, i = m.retrieve_topk(p, self.SEQ, k=999)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        # pad / [MASK] rows only ever surface at NEG_INF, after items
+        assert float(jnp.max(v[:, :20])) > -1e8
+
+    def test_bert4rec_serve_masks_query_position(self):
+        """Next-item inference: score_last must encode history +
+        appended [MASK] and read the [MASK] position."""
+        cfg = SeqRecConfig(arch="bert4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1, n_heads=2, d_ff=32)
+        m = SeqRecModel(cfg)
+        p = m.init_params(jax.random.PRNGKey(0))
+        expected_seq = jnp.concatenate(
+            [self.SEQ[:, 1:],
+             jnp.full((2, 1), cfg.mask_id, self.SEQ.dtype)], axis=1)
+        h = m.encode(p, expected_seq)
+        want = m._mask_special(m.emb.logits(p["item_emb"], h[:, -1]))
+        got = m.score_last(p, self.SEQ)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and it is NOT the un-masked last-position query
+        h_raw = m.encode(p, self.SEQ)
+        raw = m._mask_special(m.emb.logits(p["item_emb"], h_raw[:, -1]))
+        assert not np.allclose(np.asarray(got), np.asarray(raw))
+
     def test_causality_of_sasrec_scores(self):
         """score at last position must not change if we alter..."""
         cfg = SeqRecConfig(arch="sasrec", n_items=30, max_len=8,
@@ -66,6 +117,36 @@ class TestSequentialBackbones:
         seq2 = self.SEQ.at[:, 2].set(15)
         h2 = m.encode(p, seq2)
         assert not np.allclose(np.asarray(h1[:, -1]), np.asarray(h2[:, -1]))
+
+
+class TestMaskBatch:
+    SEQ = jnp.array([[0, 0, 1, 2, 3, 4, 5, 6],
+                     [0, 0, 0, 7, 8, 9, 10, 11]], jnp.int32)
+    MASK = 99
+
+    def test_final_item_always_masked(self):
+        ms, tg = mask_batch(jax.random.PRNGKey(0), self.SEQ, 0.0,
+                            self.MASK)
+        # prob 0: EXACTLY the final item is masked
+        np.testing.assert_array_equal(np.asarray(ms[:, -1]),
+                                      [self.MASK, self.MASK])
+        np.testing.assert_array_equal(np.asarray(tg[:, -1]),
+                                      np.asarray(self.SEQ[:, -1]))
+        np.testing.assert_array_equal(np.asarray(ms[:, :-1]),
+                                      np.asarray(self.SEQ[:, :-1]))
+        assert int(jnp.sum(tg > 0)) == 2
+
+    def test_no_row_without_targets(self):
+        for s in range(20):
+            _, tg = mask_batch(jax.random.PRNGKey(s), self.SEQ, 0.2,
+                               self.MASK)
+            assert bool(jnp.all(jnp.any(tg > 0, axis=1))), \
+                f"seed {s} left a row with zero targets"
+
+    def test_all_pad_row_untouched(self):
+        seq = jnp.zeros((1, 8), jnp.int32)
+        ms, tg = mask_batch(jax.random.PRNGKey(0), seq, 0.9, self.MASK)
+        assert int(ms.sum()) == 0 and int(tg.sum()) == 0
 
 
 class TestTransformerLM:

@@ -106,6 +106,49 @@ class TestRetrieveTopk:
         assert res["ids"], "sharded fused ids diverged from reference"
         assert res["vals"], "sharded fused values not bit-identical"
 
+    def test_pruned_matches_reference_unsharded(self):
+        """Score-bound pruning through the whole TwoTower serve entry:
+        bit-identical to the materialise reference."""
+        import jax
+        from repro.configs import get_bundle
+        model, batch, rng = get_bundle("two-tower-retrieval-jpq") \
+            .make_smoke()
+        p = model.init_params(rng)
+        vr, ir = jax.jit(
+            lambda p, b: model.retrieve(p, b, top_k=7, fused=False))(
+                p, batch)
+        vp, ip = jax.jit(
+            lambda p, b: model.retrieve(p, b, top_k=7, prune=True))(
+                p, batch)
+        np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(vp), np.asarray(vr))
+
+    def test_pruned_sharded_matches_unsharded_reference(self):
+        """Pruned + sharded (per-shard thresholds) on a 2x4 (data,
+        model) mesh == unsharded materialised reference, bit-for-bit."""
+        body = """
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro import dist
+        from repro.core import sharded
+        from repro.kernels.jpq_topk.ref import jpq_topk_lut_ref
+        key = jax.random.PRNGKey(0)
+        part = jax.random.normal(jax.random.fold_in(key, 1), (8, 4, 16))
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (512, 4),
+                                   0, 16, jnp.int32)
+        rv, ri = jpq_topk_lut_ref(part, codes, 9)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with dist.use_mesh_rules(mesh):
+            v, i = jax.jit(lambda pp, cc: sharded.fused_topk_over_codes(
+                pp, cc, 9, prune=True))(part, codes)
+        print(json.dumps({
+            "ids": bool(np.array_equal(np.asarray(i), np.asarray(ri))),
+            "vals": bool(np.array_equal(np.asarray(v), np.asarray(rv))),
+        }))
+        """
+        res = json.loads(run_subprocess(body).strip().splitlines()[-1])
+        assert res["ids"], "pruned sharded ids diverged from reference"
+        assert res["vals"], "pruned sharded values not bit-identical"
+
     def test_fused_topk_over_codes_data_model_mesh(self):
         """LUT-level sharded entrypoint on a 2x4 (data, model) mesh."""
         body = """

@@ -152,6 +152,42 @@ class TestData:
         b = dien_batch(d, 0, 8, 8)
         assert b["hist"].shape == (8, 8) and b["label"].shape == (8,)
 
+    def test_twotower_batch_min_length_corpus(self):
+        """Raw sequences of exactly 3 items leave train sequences of
+        length 1 — the cut draw used to crash (rng.integers(1, 1))."""
+        d = SyntheticSequences(SeqDataConfig(
+            n_users=40, n_items=20, n_clusters=1, min_len=3, max_len=3,
+            seq_len=8))
+        assert d.n_users_eff > 0
+        assert all(len(d.train_seq(u)) == 1
+                   for u in range(d.n_users_eff))
+        b = d.twotower_batch(0, 16, 8)
+        assert b["user_hist"].shape == (16, 8)
+        assert b["pos_item"].min() >= 1          # the lone item
+        assert (b["user_hist"] == 0).all()       # empty histories pad
+        assert np.isfinite(b["logq"]).all()
+
+    def test_train_batch_negatives_never_collide(self):
+        # 2-item catalogue: a uniform draw collides half the time, so
+        # any surviving collision shows up immediately
+        d = SyntheticSequences(SeqDataConfig(
+            n_users=50, n_items=2, n_clusters=1, min_len=6, max_len=10,
+            seq_len=8))
+        b = d.train_batch(0, 16, n_negatives=4)
+        lab = b["labels"][..., None]
+        neg = b["negatives"]
+        assert ((neg != lab) | (lab == 0)).all(), \
+            "negative collided with its positive label"
+        assert neg.min() >= 1 and neg.max() <= 2
+        # and on a bigger catalogue the negatives stay in range
+        d2 = SyntheticSequences(SeqDataConfig(n_users=50, n_items=40,
+                                              seq_len=8))
+        b2 = d2.train_batch(1, 8, n_negatives=3)
+        assert b2["negatives"].min() >= 1
+        assert b2["negatives"].max() <= 40
+        assert ((b2["negatives"] != b2["labels"][..., None])
+                | (b2["labels"][..., None] == 0)).all()
+
 
 class TestTrainerIntegration:
     def test_preemption_saves_and_resumes(self):
@@ -176,6 +212,84 @@ class TestTrainerIntegration:
                           data_fn=lambda s: data.train_batch(s, 8))
             _, hist = tr2.run()
             assert hist[0]["step"] == 10       # resumed, not restarted
+
+    def test_preemption_checkpoint_stamped_at_actual_step(self):
+        """A SIGTERM-preemption break must stamp the checkpoint at the
+        step actually reached — stamping cfg.steps made resume restore
+        AT cfg.steps and skip the remaining training entirely."""
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        model = SeqRecModel(cfg)
+        data = SyntheticSequences(SeqDataConfig(n_users=40, n_items=30,
+                                                seq_len=8))
+        with tempfile.TemporaryDirectory() as td:
+            box = {}
+
+            def data_fn(s):
+                if s == 3:                 # "SIGTERM" mid-run
+                    box["tr"]._preempted = True
+                return data.train_batch(s, 8)
+
+            tr = Trainer(model, OptConfig(lr=1e-2),
+                         TrainConfig(steps=10, batch_size=8, ckpt_dir=td,
+                                     ckpt_every=0, log_every=100,
+                                     eval_every=0),
+                         data_fn=data_fn)
+            box["tr"] = tr
+            tr.run()
+            # preempted after finishing step 3 -> checkpoint at step 4,
+            # and no trailing save re-stamps it at cfg.steps
+            assert latest_step(td) == 4
+            tr2 = Trainer(model, OptConfig(lr=1e-2),
+                          TrainConfig(steps=10, batch_size=8,
+                                      ckpt_dir=td, ckpt_every=0,
+                                      log_every=1, eval_every=0),
+                          data_fn=lambda s: data.train_batch(s, 8))
+            _, hist = tr2.run()
+            assert hist[0]["step"] == 4    # resumed where it stopped
+            assert latest_step(td) == 10   # ... and finished the run
+
+    def test_microbatch_rng_folds_and_metrics_flow(self):
+        """Each accumulation slice must see a DIFFERENT rng (identical
+        dropout masks across microbatches otherwise), grads must equal
+        the mean of per-slice grads under those rngs, and the full
+        metrics dict (not just loss) must survive accumulation."""
+        from repro.nn import module as nn
+        from repro.nn.module import P
+        from repro.train.optimizer import init_opt_state
+
+        class _Probe:
+            def init_params(self, rng):
+                return {"w": P(jnp.zeros(()), ())}
+
+            def train_loss(self, params, batch, rng):
+                u = jax.random.uniform(rng, ())
+                loss = params["w"].value * u + 0.0 * jnp.mean(batch["x"])
+                return loss, {"loss": loss, "probe": u}
+
+        nm = 4
+        tr = Trainer(_Probe(), OptConfig(kind="sgd", lr=1.0,
+                                         clip_norm=None),
+                     TrainConfig(steps=1, batch_size=8, microbatches=nm),
+                     data_fn=None)
+        meta = tr.model.init_params(jax.random.PRNGKey(0))
+        step_fn = jax.jit(tr._build_step(meta))
+        values = nn.values(meta)
+        rng = jax.random.PRNGKey(5)
+        new_values, _, mets = step_fn(values, init_opt_state(values),
+                                      {"x": jnp.zeros((8,))}, rng)
+        per_slice = [float(jax.random.uniform(
+            jax.random.fold_in(rng, i), ())) for i in range(nm)]
+        shared = float(jax.random.uniform(rng, ()))
+        # dropout-style rng differs per slice...
+        assert float(mets["probe"]) == pytest.approx(
+            np.mean(per_slice), rel=1e-6)
+        assert abs(float(mets["probe"]) - shared) > 1e-3
+        # ...grads are the mean of per-slice grads (d(w*u)/dw = u)...
+        assert float(new_values["w"]) == pytest.approx(
+            -np.mean(per_slice), rel=1e-6)
+        # ...and nothing beyond "loss" is dropped on the floor
+        assert "probe" in mets and "grad_norm" in mets and "lr" in mets
 
     def test_microbatch_grad_accumulation_matches(self):
         """2 microbatches ~= full batch (same data, mean loss)."""
