@@ -10,10 +10,21 @@ serving hot-path microbench and the dry-run roofline reader.
                       vs Pallas kernel (interpret), us/call + bytes moved
   jpq_topk          : PQTopK fused score+top-k vs materialise-then-top-k
                       at N ∈ {100k, 1M} (full mode), time + peak bytes
+  kernels           : Pallas kernel suite (jpq_scores / jpq_lookup /
+                      embedding_bag) in interpret mode vs refs — CPU
+                      wall + max|Δ| parity column (TPU tiles are the
+                      production target; interpret is the CI oracle)
+  grad_exchange     : elastic compressed-gradient exchange — per-method
+                      payload bytes / exchange fraction (the numbers
+                      the Trainer emits per step and dist.hlo
+                      cross-checks in HLO) + single-host step wall
   roofline          : aggregates experiments/dryrun JSONs (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the metric the
-paper's table reports).  ``--fast`` trims training steps for CI.
+paper's table reports).  ``--json`` emits the same rows as one JSON
+array (what tests/test_benchmarks.py parses); ``--smoke`` shrinks every
+subcommand to seconds for that smoke test.  Default is fast mode;
+``--full`` runs the paper-scale versions.
 """
 from __future__ import annotations
 
@@ -28,14 +39,25 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import time_fn, train_seqrec  # noqa: E402
 from repro.core import EmbeddingConfig, build_codebook  # noqa: E402
 from repro.core.api import compression_report  # noqa: E402
 
 
+_SMOKE = False          # --smoke: shrink every bench to seconds
+_JSON = False           # --json: one JSON array instead of CSV rows
+_ROWS = []
+
+
 def _row(name, us, derived):
-    print(f"{name},{us if us is not None else ''},{derived}", flush=True)
+    _ROWS.append({"name": name,
+                  "us_per_call": None if us is None else float(us),
+                  "derived": str(derived)})
+    if not _JSON:
+        print(f"{name},{us if us is not None else ''},{derived}",
+              flush=True)
 
 
 # ----------------------------------------------------------- Table 2
@@ -65,6 +87,10 @@ def _make_data(profile: str, fast: bool):
         cfg = SeqDataConfig(n_users=400 if fast else 1200, n_items=2000,
                             zipf_a=1.3, min_len=6, max_len=30,
                             seq_len=24, seed=1)
+    if _SMOKE:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_users=120, n_items=80,
+                                  seq_len=12, min_len=6, max_len=12)
     return SyntheticSequences(cfg)
 
 
@@ -92,7 +118,7 @@ def _variant_model(arch, data, variant, d_model=64, m=8, b=64):
 
 def table45_strategies(fast: bool = True):
     """Reduced-scale Tables 4/5: NDCG@10 + relative model size."""
-    steps = 150 if fast else 600
+    steps = 2 if _SMOKE else (150 if fast else 600)
     archs = ["sasrec"] if fast else ["sasrec", "gru4rec"]
     for profile in (["gowalla"] if fast else ["ml1m", "gowalla"]):
         data = _make_data(profile, fast)
@@ -113,9 +139,9 @@ def table45_strategies(fast: bool = True):
 
 def fig3_grid(fast: bool = True):
     data = _make_data("gowalla", fast=True)
-    steps = 120 if fast else 400
-    ds = [32, 64] if fast else [16, 32, 64, 128]
-    ms = [2, 8] if fast else [1, 2, 4, 8, 16]
+    steps = 2 if _SMOKE else (120 if fast else 400)
+    ds = [32] if _SMOKE else ([32, 64] if fast else [16, 32, 64, 128])
+    ms = [2] if _SMOKE else ([2, 8] if fast else [1, 2, 4, 8, 16])
     for d in ds:
         for m in ms:
             if m > d:
@@ -130,8 +156,9 @@ def fig3_grid(fast: bool = True):
 
 def fig4_tradeoff(fast: bool = True):
     data = _make_data("gowalla", fast=True)
-    steps = 120 if fast else 400
-    for d in ([32, 64] if fast else [16, 32, 64, 128, 256]):
+    steps = 2 if _SMOKE else (120 if fast else 400)
+    for d in ([32] if _SMOKE else
+              [32, 64] if fast else [16, 32, 64, 128, 256]):
         for variant in ("base", "jpq-svd"):
             model = _variant_model("sasrec", data, variant, d_model=d)
             _, ndcg, nbytes = train_seqrec(model, data, steps=steps)
@@ -150,6 +177,8 @@ def jpq_scoring(fast: bool = True):
     from repro.nn.module import KeyGen
 
     N, d, m, b, B = (100_000 if fast else 1_000_000), 256, 8, 256, 16
+    if _SMOKE:
+        N = 20_000
     pf = full_mod.init(KeyGen(0), N, d)
     pj = jpq_mod.init(KeyGen(1), N, d, m, b)
     h = jax.random.normal(jax.random.PRNGKey(2), (B, d))
@@ -171,7 +200,8 @@ def jpq_scoring(fast: bool = True):
 
     # embedding-bag hot path
     from repro.kernels.embedding_bag.ref import embedding_bag_ref
-    V, dd, nb, L = 50_000, 64, 4096, 16
+    V, dd, nb, L = (5_000, 64, 256, 16) if _SMOKE else \
+        (50_000, 64, 4096, 16)
     tab = jax.random.normal(jax.random.PRNGKey(3), (V, dd))
     ids = jax.random.randint(jax.random.PRNGKey(4), (nb, L), 0, V)
     w = jnp.ones((nb, L))
@@ -200,10 +230,11 @@ def jpq_topk_bench(fast: bool = True):
     from repro.kernels.jpq_topk import ops as tops
     from repro.kernels.jpq_topk.ref import jpq_topk_lut_ref
 
-    B, m, b, k = 64, 8, 256, 100
+    B, m, b, k = (8, 8, 256, 100) if _SMOKE else (64, 8, 256, 100)
     key = jax.random.PRNGKey(0)
     partial = jax.random.normal(key, (B, m, b))
-    for N in ([100_000] if fast else [100_000, 1_000_000]):
+    for N in ([20_000] if _SMOKE else
+              [100_000] if fast else [100_000, 1_000_000]):
         bn = tops.scan_block_n(N)
         codes = jax.random.randint(jax.random.fold_in(key, N), (N, m),
                                    0, b, jnp.int32).astype(jnp.uint8)
@@ -260,6 +291,93 @@ def jpq_topk_bench(fast: bool = True):
              f"exact_match={exact}")
 
 
+# ---------------------------------------------- Pallas kernel suite
+
+def kernels_bench(fast: bool = True):
+    """Interpret-mode rows for the three training/serving kernels
+    (ROADMAP: wire repro/kernels into the dryrun trajectory).  The
+    derived column carries max|Δ| vs the reference — the parity claim
+    CI's smoke test rides on; TPU tile timing replaces the CPU wall
+    when run on real hardware."""
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    from repro.kernels.jpq_lookup.ops import jpq_lookup
+    from repro.kernels.jpq_scores.ops import jpq_scores
+    from repro.core import jpq as jpq_mod
+    from repro.nn.module import KeyGen
+
+    N, d, m, b, B = (2_000, 64, 4, 64, 8) if _SMOKE else \
+        (20_000, 128, 8, 256, 16)
+    pj = jpq_mod.init(KeyGen(0), N, d, m, b)
+    cents, codes = pj["centroids"].value, pj["codes"].value
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+
+    f_scores = jax.jit(lambda hh: jpq_scores(hh, cents, codes))
+    ref_scores = jax.jit(lambda hh: jpq_mod.logits(pj, hh))
+    us = time_fn(f_scores, h, iters=3, warmup=1)
+    dmax = float(jnp.max(jnp.abs(f_scores(h) - ref_scores(h))))
+    _row("kernels/jpq_scores/interpret", f"{us:.0f}",
+         f"max_abs_err_vs_ref={dmax:.2e};N={N}")
+
+    ids = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, N)
+    f_lookup = jax.jit(lambda ii: jpq_lookup(ii, codes, cents))
+    ref_lookup = jax.jit(lambda ii: jpq_mod.lookup(pj, ii))
+    us = time_fn(f_lookup, ids, iters=3, warmup=1)
+    dmax = float(jnp.max(jnp.abs(f_lookup(ids) - ref_lookup(ids))))
+    _row("kernels/jpq_lookup/interpret", f"{us:.0f}",
+         f"max_abs_err_vs_ref={dmax:.2e};fanout=8")
+
+    V, dd, nb, L = (1_000, 32, 64, 8) if _SMOKE else (8_192, 64, 512, 16)
+    tab = jax.random.normal(jax.random.PRNGKey(3), (V, dd))
+    bag_ids = jax.random.randint(jax.random.PRNGKey(4), (nb, L), 0, V)
+    w = jax.random.uniform(jax.random.PRNGKey(5), (nb, L))
+    f_bag = jax.jit(lambda t, i, ww: embedding_bag(t, i, ww))
+    f_ref = jax.jit(lambda t, i, ww: embedding_bag_ref(t, i, ww))
+    us = time_fn(f_bag, tab, bag_ids, w, iters=3, warmup=1)
+    dmax = float(jnp.max(jnp.abs(f_bag(tab, bag_ids, w)
+                                 - f_ref(tab, bag_ids, w))))
+    _row("kernels/embedding_bag/interpret", f"{us:.0f}",
+         f"max_abs_err_vs_ref={dmax:.2e};nnz={nb * L}")
+
+
+# --------------------------------------- compressed gradient exchange
+
+def grad_exchange(fast: bool = True):
+    """Elastic compressed-gradient exchange accounting: per-method
+    payload bytes + exchange fraction for a SASRec-sized parameter set
+    — exactly the ``payload_bytes`` / ``exchange_fraction`` rows the
+    Trainer emits per step, cross-checkable against the HLO collective
+    bytes (tests/test_elastic_train.py pins the equality).  The wall
+    column times one exchange step on a single-device host mesh."""
+    from repro.dist import compression
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.sequential import SeqRecConfig, SeqRecModel
+    from repro.nn import module as nn
+
+    n_items = 500 if _SMOKE else 5_000
+    cfg = SeqRecConfig(arch="sasrec", n_items=n_items, max_len=16,
+                       d_model=32, n_layers=1, n_heads=2, d_ff=64)
+    model = SeqRecModel(cfg)
+    values = nn.values(model.init_params(jax.random.PRNGKey(0)))
+    full = compression.payload_bytes(values, "none")
+    mesh = make_host_mesh(1)
+    batch = {"x": jnp.ones((8, 4), jnp.float32)}
+
+    def loss_fn(v, b):
+        lf = [x for x in jax.tree.leaves(v)
+              if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+        return sum(jnp.sum(x) for x in lf) * jnp.mean(b["x"])
+
+    for method in compression.METHODS:
+        pb = compression.payload_bytes(values, method)
+        step = compression.make_dp_grad_fn(loss_fn, mesh, method=method)
+        err = compression.zeros_error_state(values, step.n_shards)
+        us = time_fn(lambda: step(values, err, batch)[0], iters=3,
+                     warmup=1)
+        _row(f"grad_exchange/{method}", f"{us:.0f}",
+             f"payload_bytes={pb};exchange_fraction={pb / full:.4f}")
+
+
 # ----------------------------------------------------------- roofline
 
 def roofline():
@@ -290,26 +408,34 @@ BENCHES = {
     "fig4": fig4_tradeoff,
     "jpq_scoring": jpq_scoring,
     "jpq_topk": jpq_topk_bench,
+    "kernels": kernels_bench,
+    "grad_exchange": grad_exchange,
     "roofline": roofline,
 }
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global _SMOKE, _JSON
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"one of {sorted(BENCHES)}")
     ap.add_argument("--full", action="store_true",
                     help="full-scale runs (slow; default is fast mode)")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sizes (the CI smoke test)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON array of rows instead of CSV")
+    args = ap.parse_args(argv)
+    _SMOKE, _JSON = args.smoke, args.json
     fast = not args.full
-    print("name,us_per_call,derived")
+    if not _JSON:
+        print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
-        try:
-            fn(fast) if fn.__code__.co_argcount else fn()
-        except TypeError:
-            fn()
+        fn(fast) if fn.__code__.co_argcount else fn()
+    if _JSON:
+        print(json.dumps(_ROWS))
 
 
 if __name__ == "__main__":

@@ -96,11 +96,17 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
-                       shardings=None):
+                       shardings=None, strict: bool = True):
     """Restore into the structure of ``like``.
 
     ``shardings``: optional matching pytree of NamedSharding — leaves are
-    device_put with the *target* sharding (elastic re-mesh restore).
+    device_put with the *target* sharding (elastic re-mesh restore:
+    params, opt state and error-feedback state written on mesh A are
+    re-laid-out onto mesh B).  ``strict=False`` keeps the ``like`` leaf
+    for keys absent from the checkpoint (e.g. resuming a pre-dp-path
+    checkpoint whose error-feedback state doesn't exist yet) instead of
+    raising; shape mismatches always raise — a silently re-laid-out
+    wrong-shaped leaf would corrupt the run.
     Returns (tree, step).
     """
     if step is None:
@@ -120,8 +126,21 @@ def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
                       if shardings is not None else None)
     for i, (key, ref) in enumerate(paths):
         if key not in flat:
+            if not strict:
+                arr = np.asarray(ref)
+                if flat_shardings is not None:
+                    arr = jax.device_put(arr, flat_shardings[i])
+                new_leaves.append(arr)
+                continue
             raise KeyError(f"checkpoint missing key {key!r}")
         arr = flat[key]
+        if hasattr(ref, "shape") and tuple(arr.shape) != \
+                tuple(np.shape(ref)):
+            raise ValueError(
+                f"checkpoint key {key!r} has shape {arr.shape}, "
+                f"expected {tuple(np.shape(ref))} — was the run "
+                f"restarted with a different grad_accum_shards/model "
+                f"config?")
         if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
             ref_dt = np.dtype(ref.dtype)
             if arr.dtype.kind == "V" and arr.dtype.itemsize == \

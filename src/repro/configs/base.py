@@ -80,14 +80,66 @@ def train_step_builder(model):
 
 
 def serve_builder(method: str):
-    def builder(model):
+    """Builder for serve cells.  The returned builder accepts optional
+    keyword arguments (e.g. ``fused=False`` / ``prune=True`` from
+    launch/dryrun.py's --serve flags) and forwards the subset the serve
+    method actually supports — bulk paths without a fused/pruned
+    variant just ignore them."""
+    def builder(model, **kw):
+        import inspect
+
         from repro.nn import module as nn
+
+        bound = getattr(model, method)
+        accepted = set(inspect.signature(bound).parameters)
+        kw = {k: v for k, v in kw.items() if k in accepted}
 
         def fn(values, batch):
             params = nn.with_values(model._params_meta, values)
-            return getattr(model, method)(params, batch)
+            return bound(params, batch, **kw)
         return fn
     return builder
+
+
+def dp_train_step_builder(model, mesh, method: str,
+                          accum_shards: int | None = None):
+    """Train-cell variant routed through the elastic compressed
+    gradient exchange (repro.dist.compression) so the dry-run's
+    collective accounting reflects the bytes the compressed exchange
+    actually ships.  Returns ``(fn, err_state_eval_shape)`` where
+    ``fn(values, opt_state, err_state, batch) -> (new_values,
+    new_opt_state, new_err, loss)``.  Parameters stay replicated on
+    this path (the exchange ships full-leaf payloads)."""
+    from repro.dist import compression
+    from repro.nn import module as nn
+    from repro.train.optimizer import OptConfig, apply_updates
+
+    opt_cfg = OptConfig(kind="adamw", lr=1e-4, weight_decay=0.01)
+
+    def loss_fn(values, batch):
+        params = nn.with_values(model._params_meta, values)
+        loss, _ = model.train_loss(params, batch)
+        return loss
+
+    def apply_fn(values, opt_state, grads):
+        return apply_updates(opt_cfg, opt_state, values, grads)
+
+    step = compression.make_elastic_dp_step(
+        loss_fn, mesh, method, accum_shards=accum_shards,
+        apply_fn=apply_fn)
+
+    def fn(values, opt_state, err_state, batch):
+        new_values, new_opt, new_err, mets = step(
+            values, opt_state, err_state, batch)
+        return new_values, new_opt, new_err, mets["loss"]
+
+    def err_shapes(values_sds):
+        return jax.eval_shape(
+            lambda v: compression.zeros_error_state(v, step.n_shards),
+            values_sds)
+
+    fn.n_shards = step.n_shards
+    return fn, err_shapes
 
 
 def decode_builder(model):

@@ -1,20 +1,51 @@
-"""Data-parallel gradient exchange with payload compression.
+"""Elastic-deterministic data-parallel gradient exchange with payload
+compression.
 
-``make_dp_grad_fn`` builds the data-parallel step used when gradient
-all-reduce traffic is the bottleneck (large embedding tables over slow
-inter-pod links): each data shard computes its local gradient,
-compresses it (``bf16`` cast or per-tensor symmetric ``int8``
-quantisation), and the *decompressed* payloads are mean-reduced across
-the shards.  Compression error is carried in per-shard **error
-feedback** state (Seide et al. 2014; Karimireddy et al. 2019): the
-residual ``(g + e) - dequant(quant(g + e))`` is added back to the next
-step's gradient, so compressed training converges to the same optimum
-instead of stalling at the quantisation floor.
+``make_elastic_dp_step`` builds the data-parallel training step used
+when gradient all-reduce traffic is the bottleneck (large embedding
+tables over slow inter-pod links): the global batch is cut into a fixed
+number of **virtual shards** ``V`` (``accum_shards``), each virtual
+shard's gradient is compressed (``bf16`` cast or per-tensor symmetric
+``int8`` quantisation), and the *compressed* payloads are exchanged
+with an all-gather and mean-reduced in a fixed order.  Compression
+error is carried in per-virtual-shard **error feedback** state (Seide
+et al. 2014; Karimireddy et al. 2019): the residual ``(g + e) -
+dequant(quant(g + e))`` is added back to the next step's gradient, so
+compressed training converges to the same optimum instead of stalling
+at the quantisation floor.
 
-``payload_bytes`` is the matching accounting hook for the dry-run
-roofline: bytes of *compressed* gradient payload exchanged per step and
-per shard (quantisation scales — one scalar per tensor — are excluded;
-they are noise next to the payload).
+Why virtual shards instead of one shard per device: because ``V`` is
+fixed per *run* — not per mesh — the step is **bitwise deterministic
+across mesh sizes**.  A run started on 8 devices and resumed on 4
+(elastic rescale after a preemption) produces bit-identical parameters
+to an uninterrupted run.  Three properties make this hold:
+
+  1. every virtual slice's gradient is computed by a structurally
+     identical per-device subgraph: each ``collect`` dispatch processes
+     exactly ONE slice per device, and the host drives ``L = V / D``
+     rounds (fewer devices just means more rounds).  Running several
+     slices inside one module lets XLA batch the gemms and perturbs the
+     reduction order at the ULP level — one-slice-per-dispatch is what
+     pins the numerics;
+  2. the only cross-device op is an all-gather — exact, no arithmetic;
+  3. the dequantise / mean / (optional) optimizer update runs in a
+     ``combine`` module whose inputs are the replicated ``[V, ...]``
+     payload stacks — its shapes never mention the device count.
+
+The error-feedback state is likewise ``[V, ...]`` per float leaf —
+mesh-shape independent, so a checkpoint restores onto any mesh whose
+data-parallel degree divides ``V`` (``repro.ckpt.restore_checkpoint``
+re-lays it out; ``repro.train.loop.Trainer`` threads all of this).
+
+``payload_bytes`` is the matching accounting hook: bytes of
+*compressed* gradient payload a virtual shard ships per step
+(quantisation scales — one scalar per tensor — are excluded; they are
+noise next to the payload).  The all-gathers really do carry the
+compressed dtype, so the same number is visible in compiled HLO via
+``repro.dist.hlo.collective_bytes`` — the cross-check the conformance
+suite (tests/test_elastic_train.py) pins down.
+
+``make_dp_grad_fn`` is the grads-only surface over the same machinery.
 """
 from __future__ import annotations
 
@@ -22,6 +53,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.dist import rules as _rules
@@ -47,10 +79,20 @@ def dp_shard_count(mesh) -> int:
     return math.prod(mesh.shape[a] for a in _dp_axes(mesh))
 
 
+def dp_partition_spec(mesh) -> PartitionSpec:
+    """Spec sharding a leading virtual-shard axis (error-feedback
+    state, per-round batch rows) over the mesh's data axes — the one
+    rule the Trainer's restore path, the dryrun cell builder and the
+    exchange itself all share."""
+    dp = _dp_axes(mesh)
+    return PartitionSpec(dp if len(dp) > 1 else dp[0])
+
+
 def zeros_error_state(values, n_shards: int):
-    """Per-shard error-feedback state: one residual per float leaf,
-    stacked along a leading ``n_shards`` axis (sharded over the data
-    axes inside the step)."""
+    """Per-virtual-shard error-feedback state: one residual per float
+    leaf, stacked along a leading ``n_shards`` axis (sharded over the
+    data axes inside the step).  Row ``v`` belongs to batch slice ``v``
+    regardless of the mesh — the state survives an elastic re-mesh."""
     return jax.tree.map(
         lambda v: jnp.zeros((n_shards,) + tuple(jnp.shape(v)),
                             jnp.float32)
@@ -59,7 +101,7 @@ def zeros_error_state(values, n_shards: int):
 
 
 def payload_bytes(values, method: str) -> int:
-    """Compressed gradient bytes exchanged per shard per step."""
+    """Compressed gradient bytes one virtual shard ships per step."""
     if method not in METHODS:
         raise ValueError(f"unknown compression method {method!r}")
     total = 0
@@ -73,65 +115,238 @@ def payload_bytes(values, method: str) -> int:
     return total
 
 
-def _compress(t, method: str):
-    """t = grad + error  ->  (dequantised payload, new error)."""
+def _quantise(t, method: str):
+    """t = grad + error (f32) -> (payload, scale, new_error)."""
     if method == "bf16":
-        deq = t.astype(jnp.bfloat16).astype(jnp.float32)
-    else:                                              # int8
+        q = t.astype(jnp.bfloat16)
+        return q, None, t - q.astype(jnp.float32)
+    if method == "int8":
         scale = jnp.maximum(jnp.max(jnp.abs(t)) / 127.0, 1e-30)
         q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
-        deq = q.astype(jnp.float32) * scale
-    return deq, t - deq
+        return q, scale, t - q.astype(jnp.float32) * scale
+    return t, None, jnp.zeros_like(t)                  # none
 
 
-def make_dp_grad_fn(loss_fn, mesh, method: str = "none"):
-    """Build ``(values, err_state, batch) -> (grads, err_state, loss)``.
+def _dequantise(stack, scales, method: str):
+    """[V, ...] payload stack (+ [V] scales for int8) -> f32 stack."""
+    if method == "int8":
+        sh = (stack.shape[0],) + (1,) * (stack.ndim - 1)
+        return stack.astype(jnp.float32) * scales.reshape(sh)
+    return stack.astype(jnp.float32)
 
-    ``loss_fn(values, batch) -> scalar``.  The batch's leading dim is
-    split over the mesh's data axes; returned grads/loss are the
-    across-shard means (identical semantics to an uncompressed
-    all-reduce when ``method="none"``).
+
+def _dp_flat_index(dp_axes, mesh):
+    """Row-major flat index over the data axes — matches the
+    concatenation order of ``lax.all_gather(axis_name=dp_axes)``."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in dp_axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
+                         accum_shards: int | None = None,
+                         has_aux: bool = False, with_rng: bool = False,
+                         apply_fn=None):
+    """Build the elastic-deterministic data-parallel step.
+
+    ``loss_fn(values, batch[, rng]) -> loss`` (or ``(loss, aux)`` with
+    ``has_aux``).  Returns ``step`` with signature::
+
+        step(values, err_state, batch[, rng])            (no apply_fn)
+            -> (grads, new_err, loss[, aux])
+        step(values, opt_state, err_state, batch[, rng]) (with apply_fn)
+            -> (new_values, new_opt, new_err, metrics)
+
+    where ``apply_fn(values, opt_state, grads) -> (new_values,
+    new_opt_state, stats)`` and metrics = aux means ∪ stats ∪
+    ``{"loss"}``.  Gradients/loss are the fixed-order means over the
+    ``accum_shards`` virtual shards — identical bits on any mesh whose
+    data-parallel degree divides ``accum_shards``.
+
+    ``step`` is a host-level function composed of two jitted modules,
+    exposed as ``step.collect`` (per-slice grad + compress + gather;
+    this is where the payload collectives live) and ``step.combine``
+    (dequantise + ordered mean + update).  ``step.n_shards`` is the
+    virtual shard count, ``step.rounds`` the dispatches per step on
+    this mesh.  The whole of ``step`` is also jax-traceable, so it can
+    be lowered as one module for AOT accounting (launch/dryrun.py).
     """
     if method not in METHODS:
         raise ValueError(f"unknown compression method {method!r}")
     dp = _dp_axes(mesh)
-    dp_entry = dp if len(dp) > 1 else dp[0]
-    n_shards = dp_shard_count(mesh)
-    vg = jax.value_and_grad(loss_fn)
+    D = dp_shard_count(mesh)
+    V = D if accum_shards is None else int(accum_shards)
+    if V % D != 0:
+        raise ValueError(
+            f"accum_shards={V} must be a multiple of the mesh's "
+            f"data-parallel degree {D}")
+    L = V // D
+    vg = jax.value_and_grad(loss_fn, has_aux=has_aux, allow_int=True)
 
-    def body(values, err, batch):
-        loss, g = vg(values, batch)
+    def body(values, err_rows, batch_rows, rng, rnd):
+        # exactly one virtual slice per device: [1, B/V, ...] locally
+        mb = jax.tree.map(lambda x: x[0], batch_rows)
+        vi = _dp_flat_index(dp, mesh) * L + rnd        # virtual index
+        args = (values, mb)
+        if with_rng:
+            args += (jax.random.fold_in(rng, vi),)
+        out, g = vg(*args)
+        loss, aux = out if has_aux else (out, {})
 
-        def exchange(gl, el):
+        def one(gl, el):
             if not _is_float(gl) or not gl.size:
-                return gl, el
-            e0 = el[0]                       # local error block [1, ...]
-            t = gl.astype(jnp.float32) + e0
-            if method == "none":
-                deq, new_e = t, jnp.zeros_like(e0)
-            else:
-                deq, new_e = _compress(t, method)
-            g_sync = jax.lax.pmean(deq, dp)
-            return g_sync.astype(gl.dtype), new_e[None]
+                # int/float0/empty leaves: nothing to exchange
+                z = jnp.zeros((0,), jnp.float32)
+                return z, jnp.zeros((), jnp.float32), el
+            t = gl.astype(jnp.float32) + el[0]
+            pay, scale, new_e = _quantise(t, method)
+            if scale is None:
+                scale = jnp.zeros((), jnp.float32)
+            return pay, scale, new_e[None]
 
         flat_g, tdef = jax.tree.flatten(g)
-        flat_e = tdef.flatten_up_to(err)
-        out = [exchange(gl, el) for gl, el in zip(flat_g, flat_e)]
-        grads = tdef.unflatten([o[0] for o in out])
-        new_err = tdef.unflatten([o[1] for o in out])
-        return grads, new_err, jax.lax.pmean(loss, dp)
+        flat_e = tdef.flatten_up_to(err_rows)
+        outs = [one(gl, el) for gl, el in zip(flat_g, flat_e)]
+        gath = lambda x: jax.lax.all_gather(x, dp, axis=0, tiled=False)  # noqa: E731
+        pays = tdef.unflatten([gath(o[0]) for o in outs])     # [D, ...]
+        scales = tdef.unflatten([gath(o[1]) for o in outs])   # [D]
+        new_err = tdef.unflatten([o[2] for o in outs])
+        loss_g = gath(loss)                                   # [D]
+        aux_g = jax.tree.map(gath, dict(aux))
+        return pays, scales, new_err, loss_g, aux_g
 
-    def step(values, err_state, batch):
-        repl = jax.tree.map(lambda _: PartitionSpec(), values)
-        err_specs = jax.tree.map(lambda _: PartitionSpec(dp_entry),
-                                 err_state)
-        batch_specs = jax.tree.map(lambda _: PartitionSpec(dp_entry),
-                                   batch)
-        f = shard_map(body, mesh=mesh,
-                      in_specs=(repl, err_specs, batch_specs),
-                      out_specs=(repl, err_specs, PartitionSpec()),
-                      check_vma=False)
-        return f(values, err_state, batch)
+    repl = PartitionSpec()
+    err_spec = dp_partition_spec(mesh)
 
-    step.n_shards = n_shards
-    return jax.jit(step)
+    def collect(values, err_rows, batch_rows, rng, rnd):
+        specs_v = jax.tree.map(lambda _: repl, values)
+        specs_e = jax.tree.map(lambda _: err_spec, err_rows)
+        specs_b = jax.tree.map(lambda _: err_spec, batch_rows)
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(specs_v, specs_e, specs_b, repl, repl),
+            out_specs=(jax.tree.map(lambda _: repl, values),
+                       jax.tree.map(lambda _: repl, values),
+                       specs_e, repl,
+                       repl),
+            check_vma=False)
+        return f(values, err_rows, batch_rows, rng, rnd)
+
+    collect = jax.jit(collect)
+
+    def combine(values, opt_state, pays, scales, losses, auxes):
+        # interleave the L rounds back into virtual order v = d*L + r:
+        # stack [L × [D, ...]] on axis=1 -> [D, L, ...] -> [V, ...].
+        # The barrier materialises the [V, ...] stack before any
+        # reduction: XLA otherwise fuses the concatenate into the mean
+        # and re-brackets the sum differently per round count — the
+        # reduction must always see one contiguous [V, ...] operand for
+        # the fixed-order (mesh-size-independent) mean to hold bitwise.
+        def stack(xs):
+            s = jnp.stack(xs, axis=1)
+            return jax.lax.optimization_barrier(
+                s.reshape((V,) + s.shape[2:]))
+
+        flat_p = [jax.tree.leaves(p) for p in pays]
+        flat_s = [jax.tree.leaves(s) for s in scales]
+        tdef = jax.tree.structure(pays[0])
+        flat_v = tdef.flatten_up_to(values)
+        grads = []
+        for li in range(len(flat_p[0])):
+            rounds_p = [flat_p[r][li] for r in range(L)]
+            if rounds_p[0].shape[1:] == (0,):
+                # unexchanged (int/empty) leaf: a zero gradient in the
+                # leaf's own shape/dtype keeps tree-wide updates valid
+                vl = flat_v[li]
+                grads.append(jnp.zeros(jnp.shape(vl),
+                                       jnp.asarray(vl).dtype))
+                continue
+            pstack = stack(rounds_p)                   # [V, ...]
+            sstack = stack([flat_s[r][li] for r in range(L)])
+            deq = _dequantise(pstack, sstack, method)
+            grads.append(jnp.mean(deq, axis=0))        # fixed order
+        grads = tdef.unflatten(grads)
+        loss = jnp.mean(stack(list(losses)))
+        aux = jax.tree.map(lambda *xs: jnp.mean(stack(list(xs))),
+                           *auxes) if auxes[0] else {}
+        if apply_fn is None:
+            return grads, loss, aux
+        new_values, new_opt, stats = apply_fn(values, opt_state, grads)
+        mets = {"loss": loss, **aux, **stats}
+        return new_values, new_opt, mets
+
+    combine = jax.jit(combine)
+
+    idx_rounds = [np.arange(D) * L + r for r in range(L)]
+
+    def _run(values, opt_state, err_state, batch, rng):
+        bshape = {jnp.shape(x)[0] for x in jax.tree.leaves(batch)}
+        for b in bshape:
+            if b % V != 0:
+                raise ValueError(
+                    f"batch leading dim {b} not divisible by "
+                    f"accum_shards={V}")
+        rows = jax.tree.map(
+            lambda x: x.reshape((V, jnp.shape(x)[0] // V)
+                                + jnp.shape(x)[1:]), batch)
+        pays, scales, errs, losses, auxes = [], [], [], [], []
+        for r, idx in enumerate(idx_rounds):
+            e_r = jax.tree.map(lambda x: x[idx], err_state)
+            b_r = jax.tree.map(lambda x: x[idx], rows)
+            p, s, e, lo, au = collect(values, e_r, b_r, rng,
+                                      jnp.int32(r))
+            pays.append(p)
+            scales.append(s)
+            errs.append(e)
+            losses.append(lo)
+            auxes.append(au)
+        # err rows back into [V, ...] virtual order (exact interleave)
+        new_err = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=1).reshape(
+                (V,) + jnp.shape(xs[0])[1:]), *errs)
+        out = combine(values, opt_state, tuple(pays), tuple(scales),
+                      tuple(losses), tuple(auxes))
+        if apply_fn is None:
+            grads, loss, aux = out
+            ret = (grads, new_err, loss)
+            return ret + ((aux,) if has_aux else ())
+        new_values, new_opt, mets = out
+        return new_values, new_opt, new_err, mets
+
+    if apply_fn is None:
+        if with_rng:
+            def step(values, err_state, batch, rng):
+                return _run(values, None, err_state, batch, rng)
+        else:
+            def step(values, err_state, batch):
+                return _run(values, None, err_state, batch, None)
+    else:
+        if with_rng:
+            def step(values, opt_state, err_state, batch, rng):
+                return _run(values, opt_state, err_state, batch, rng)
+        else:
+            def step(values, opt_state, err_state, batch):
+                return _run(values, opt_state, err_state, batch, None)
+
+    step.n_shards = V
+    step.rounds = L
+    step.method = method
+    step.collect = collect
+    step.combine = combine
+    return step
+
+
+def make_dp_grad_fn(loss_fn, mesh, method: str = "none", *,
+                    accum_shards: int | None = None):
+    """Grads-only surface: ``(values, err_state, batch) -> (grads,
+    err_state, loss)``.  ``loss_fn(values, batch) -> scalar``; the
+    batch's leading dim is split over ``accum_shards`` virtual shards
+    (default: the mesh's data-parallel degree) and grads/loss are the
+    fixed-order across-shard means — identical semantics to an
+    uncompressed all-reduce when ``method="none"``, identical *bits*
+    across mesh sizes for every method.  Non-float leaves (frozen
+    codebooks etc.) come back as zero "gradients" in the leaf's own
+    shape/dtype, so tree-wide ``v - lr * g`` updates stay valid."""
+    return make_elastic_dp_step(loss_fn, mesh, method,
+                                accum_shards=accum_shards)

@@ -49,8 +49,16 @@ def _replicated_or_param(mesh, s, p_sh):
     return NamedSharding(mesh, PartitionSpec())
 
 
-def build_cell_args(bundle, cell, model, mesh, rules=None):
-    """Returns (fn, args tuple of SDS-with-sharding, donate_argnums)."""
+def build_cell_args(bundle, cell, model, mesh, rules=None, *,
+                    serve_kwargs=None, grad_compression=None,
+                    accum_shards=None):
+    """Returns (fn, args tuple of SDS-with-sharding, donate_argnums).
+
+    ``serve_kwargs``: forwarded to serve-cell builders (fused/prune
+    variants — builders drop keys their method doesn't accept).
+    ``grad_compression``: route train cells through the elastic
+    compressed-gradient exchange (configs.base.dp_train_step_builder)
+    so the collective accounting shows the compressed payload bytes."""
     params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     model._params_meta = params_sds
     values_sds = nn.values(params_sds)
@@ -63,9 +71,29 @@ def build_cell_args(bundle, cell, model, mesh, rules=None):
             spec.axes, spec.shape, mesh, rules))
         batch_in[name] = _sds(spec.shape, spec.dtype, sh)
 
-    fn = cell.build(model)
+    if cell.kind == "serve" and serve_kwargs:
+        fn = cell.build(model, **serve_kwargs)
+    else:
+        fn = cell.build(model)
     if cell.kind == "train":
         opt_sds = jax.eval_shape(init_opt_state, values_sds)
+        if grad_compression:
+            from repro.configs.base import dp_train_step_builder
+            from repro.dist import compression
+            fn, err_shapes = dp_train_step_builder(
+                model, mesh, grad_compression,
+                accum_shards=accum_shards)
+            repl = NamedSharding(mesh, PartitionSpec())
+            err_sh = NamedSharding(mesh,
+                                   compression.dp_partition_spec(mesh))
+            values_in = _attach(values_sds,
+                                jax.tree.map(lambda _: repl, values_sds))
+            opt_in = _attach(opt_sds,
+                             jax.tree.map(lambda _: repl, opt_sds))
+            err_sds = err_shapes(values_sds)
+            err_in = _attach(err_sds,
+                             jax.tree.map(lambda _: err_sh, err_sds))
+            return fn, (values_in, opt_in, err_in, batch_in), (0, 1, 2)
         m_sh = jax.tree.map(
             lambda s, psh: _replicated_or_param(mesh, s, psh),
             opt_sds["m"], p_sh)
@@ -91,7 +119,8 @@ def build_cell_args(bundle, cell, model, mesh, rules=None):
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              rules=None, save: bool = True, force: bool = False,
-             tag: str = "") -> dict:
+             tag: str = "", serve_kwargs=None, grad_compression=None,
+             accum_shards=None) -> dict:
     mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
     os.makedirs(os.path.join(RESULTS_DIR, mesh_name), exist_ok=True)
     out_path = os.path.join(RESULTS_DIR, mesh_name,
@@ -116,8 +145,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         mesh = make_production_mesh(multi_pod=multi_pod)
         n_chips = int(np.prod(list(mesh.shape.values())))
         model = bundle.make_model(shape)
-        fn, args, donate = build_cell_args(bundle, cell, model, mesh,
-                                           rules)
+        fn, args, donate = build_cell_args(
+            bundle, cell, model, mesh, rules,
+            serve_kwargs=serve_kwargs, grad_compression=grad_compression,
+            accum_shards=accum_shards)
         with dist.use_mesh_rules(mesh, rules):
             jfn = jax.jit(fn, donate_argnums=donate)
             lowered = jfn.lower(*args)
@@ -174,7 +205,36 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--tag", default="", help="results subdir suffix "
                     "(perf-iteration variants)")
+    ap.add_argument("--serve-fused", dest="serve_fused",
+                    action="store_true", default=None,
+                    help="force the fused PQTopK path in serve cells "
+                         "(JPQ archs default to it already)")
+    ap.add_argument("--no-serve-fused", dest="serve_fused",
+                    action="store_false",
+                    help="materialise-then-top-k reference serve path")
+    ap.add_argument("--serve-prune", action="store_true",
+                    help="score-bound dynamically pruned fused serve "
+                         "path (docs/serving.md §pruning)")
+    ap.add_argument("--grad-compression", default=None,
+                    choices=["none", "bf16", "int8"],
+                    help="lower train cells through the elastic "
+                         "compressed-gradient exchange so collective "
+                         "bytes reflect the compressed payloads")
+    ap.add_argument("--grad-accum-shards", type=int, default=None)
     args = ap.parse_args()
+
+    serve_kwargs = {}
+    if args.serve_fused is not None:
+        serve_kwargs["fused"] = args.serve_fused
+    if args.serve_prune:
+        serve_kwargs["prune"] = True
+    serve_kwargs = serve_kwargs or None
+    if not args.tag:        # variants must not overwrite the baseline
+        bits = ([f"gc-{args.grad_compression}"]
+                if args.grad_compression else [])
+        bits += ["prune"] if args.serve_prune else []
+        bits += ["nofused"] if args.serve_fused is False else []
+        args.tag = "-" + "-".join(bits) if bits else ""
 
     cells = []
     if args.all:
@@ -189,7 +249,10 @@ def main():
 
     for arch, shape in cells:
         rec = run_cell(arch, shape, multi_pod=args.multi_pod,
-                       force=args.force, tag=args.tag)
+                       force=args.force, tag=args.tag,
+                       serve_kwargs=serve_kwargs,
+                       grad_compression=args.grad_compression,
+                       accum_shards=args.grad_accum_shards)
         status = ("SKIP: " + rec["skipped"][:60] if "skipped" in rec
                   else "ERROR: " + rec.get("error", "")[:120]
                   if "error" in rec else

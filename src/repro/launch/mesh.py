@@ -20,6 +20,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(n_devices: int = 1, model: int = 1):
-    """Small mesh over however many (host) devices exist — tests."""
+    """Small mesh over however many (host) devices exist — tests and
+    the launch/train.py CPU-SPMD path."""
+    if model < 1 or n_devices % model != 0:
+        raise ValueError(
+            f"model axis {model} must divide the device count "
+            f"{n_devices}")
     data = n_devices // model
     return jax.make_mesh((data, model), ("data", "model"))

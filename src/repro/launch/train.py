@@ -11,7 +11,12 @@ dry-run covers them).  --devices N > 1 forks host devices (CPU SPMD) and
 runs the same pjit path a TPU pod would.
 
 Fault-tolerance knobs exercised here: --ckpt-every (atomic async saves),
-SIGTERM -> save-and-exit, automatic resume from --ckpt-dir.
+SIGTERM -> save-and-exit, automatic resume from --ckpt-dir.  With
+--grad-compression (and a fixed --grad-accum-shards) the resume may use
+a *differently-sized* mesh: ``--mesh 4`` after an 8-device run restores
+params, opt state and error-feedback state onto the new mesh and
+continues bit-identically to an uninterrupted run (elastic restore,
+docs/sharding.md).
 """
 import argparse
 import os
@@ -38,10 +43,23 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--devices", type=int, default=1,
                     help="forked host devices for SPMD (CPU)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="alias for --devices; spell the restart of a "
+                         "preempted run on a differently-sized mesh")
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=["none", "bf16", "int8"],
+                    help="elastic compressed-gradient exchange; 'none' "
+                         "still switches to the deterministic "
+                         "virtual-shard path (see TrainConfig)")
+    ap.add_argument("--grad-accum-shards", type=int, default=None,
+                    help="fixed virtual shard count; keep it constant "
+                         "across elastic restarts")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.mesh is not None:
+        args.devices = args.mesh
     if args.devices > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
@@ -58,7 +76,10 @@ def main():
     from repro.train.optimizer import OptConfig
 
     mesh = None
-    if args.devices > 1:
+    if args.devices > 1 or args.grad_compression is not None \
+            or args.grad_accum_shards is not None:
+        # the grad-compression path needs a mesh even single-device
+        # (a (1, 1) host mesh: one data shard, V accumulation rounds)
         mesh = make_host_mesh(args.devices, args.model_axis)
         print(f"mesh: {dict(mesh.shape)}")
 
@@ -121,11 +142,19 @@ def main():
                              ckpt_every=args.ckpt_every,
                              early_stop_patience=args.early_stop_patience,
                              microbatches=args.microbatches,
+                             grad_compression=args.grad_compression,
+                             grad_accum_shards=args.grad_accum_shards,
                              seed=args.seed),
                  data_fn=data_fn, eval_fn=eval_fn, mesh=mesh)
     _, hist = tr.run()
     for h in hist[-5:]:
         print(h)
+    if tr._preempted:
+        print(f"preempted: checkpoint stamped at step {tr.done_step}; "
+              f"resume with the same --ckpt-dir (any mesh size whose "
+              f"data-parallel degree divides the accum shards)")
+    else:
+        print(f"done at step {tr.done_step}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,13 @@ preemption handling, step-time watchdog (straggler logging).
 Works single-host (CPU validation runs) and under a mesh: pass ``mesh``
 and the loop resolves parameter/optimizer shardings from the logical
 axis rules, jits with those in/out shardings, and constrains batches to
-the data axes.  This same class is what launch/train.py drives.
+the data axes.  With ``TrainConfig.grad_compression`` /
+``grad_accum_shards`` the mesh step instead routes through the elastic
+compressed-gradient exchange (``repro.dist.compression``): bf16/int8
+payloads with error feedback carried — and checkpointed — next to the
+optimizer state, bitwise deterministic across mesh sizes so a
+preempted run resumes on a smaller mesh bit-identically
+(docs/sharding.md).  This same class is what launch/train.py drives.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import numpy as np
 
 from repro import dist
 from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.dist import compression
 from repro.nn import module as nn
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
 
@@ -36,6 +43,19 @@ class TrainConfig:
     microbatches: int = 1              # gradient accumulation
     watchdog_factor: float = 3.0       # flag steps slower than f * median
     seed: int = 0
+    # --- elastic compressed-gradient exchange (docs/sharding.md) ---
+    # None inherits OptConfig.grad_compression; setting either this to
+    # "none"/"bf16"/"int8" explicitly, or grad_accum_shards, routes the
+    # mesh step through dist.compression.make_elastic_dp_step: the batch
+    # is cut into grad_accum_shards fixed virtual shards (default: the
+    # mesh's data-parallel degree), payloads are exchanged compressed
+    # with per-shard error feedback, and the resulting step is bitwise
+    # deterministic across mesh sizes whose dp degree divides the shard
+    # count — the property elastic restore (SIGTERM -> resume on a
+    # smaller mesh) relies on.  The default (None, method "none") keeps
+    # the legacy fp32 jit-sharded step.
+    grad_compression: Optional[str] = None
+    grad_accum_shards: Optional[int] = None
 
 
 class Trainer:
@@ -53,6 +73,28 @@ class Trainer:
         self._preempted = False
         self._step_times: list = []
         self.history: list = []
+        self.done_step = 0
+        self.err_state = None              # error feedback (dp path)
+        method = (train_cfg.grad_compression
+                  if train_cfg.grad_compression is not None
+                  else opt_cfg.grad_compression)
+        if method not in compression.METHODS:
+            raise ValueError(f"unknown grad_compression {method!r}")
+        self._dp_method = method
+        self._use_dp = (train_cfg.grad_compression is not None
+                        or train_cfg.grad_accum_shards is not None
+                        or method != "none")
+        if self._use_dp and mesh is None:
+            raise ValueError(
+                "grad_compression / grad_accum_shards require a mesh")
+        if self._use_dp and train_cfg.microbatches > 1:
+            raise ValueError(
+                "grad_compression already accumulates over "
+                "grad_accum_shards virtual shards; set microbatches=1")
+        self._accum = None
+        if self._use_dp:
+            self._accum = (train_cfg.grad_accum_shards
+                           or compression.dp_shard_count(mesh))
 
     # ----------------------------------------------------------- setup
     def _install_sigterm(self):
@@ -115,6 +157,38 @@ class Trainer:
 
         return train_step
 
+    def _build_dp_step(self, params_meta):
+        """Elastic-deterministic compressed-exchange step (docs/
+        sharding.md §Gradient compression in the Trainer): returns
+        ``step(values, opt_state, err_state, batch, rng) ->
+        (new_values, new_opt, new_err, mets)``.  Parameters stay
+        replicated on the dp path (the exchange ships full-leaf
+        payloads); per-virtual-shard rng folds keep dropout masks
+        mesh-invariant."""
+        model, opt_cfg = self.model, self.opt_cfg
+
+        def loss_fn(values, batch, rng):
+            params = nn.with_values(params_meta, values)
+            loss, mets = model.train_loss(params, batch, rng)
+            return loss, mets
+
+        def apply_fn(values, opt_state, grads):
+            return apply_updates(opt_cfg, opt_state, values, grads)
+
+        return compression.make_elastic_dp_step(
+            loss_fn, self.mesh, self._dp_method,
+            accum_shards=self._accum, has_aux=True, with_rng=True,
+            apply_fn=apply_fn)
+
+    def _payload_metrics(self, values):
+        """Static per-step exchange accounting rows (the conformance
+        suite cross-checks these against the HLO collective bytes)."""
+        pb = compression.payload_bytes(values, self._dp_method)
+        full = compression.payload_bytes(values, "none")
+        return {"payload_bytes": pb,
+                "exchange_fraction": pb / full if full else 0.0,
+                "exchange_shards": self._accum}
+
     # ------------------------------------------------------------- run
     def run(self, rng=None, resume: bool = True):
         cfg = self.cfg
@@ -123,6 +197,8 @@ class Trainer:
         params_meta = self.model.init_params(rng)
         values = nn.values(params_meta)
         opt_state = init_opt_state(values)
+        err_state = (compression.zeros_error_state(values, self._accum)
+                     if self._use_dp else None)
         start_step = 0
 
         ckpt = None
@@ -132,28 +208,40 @@ class Trainer:
                 state = {"values": values, "opt": opt_state}
                 shardings = None
                 if self.mesh is not None:
-                    shardings = {
-                        "values": dist.params_shardings(
-                            params_meta, self.mesh, self.rules),
-                        "opt": _opt_shardings(opt_state, params_meta,
-                                              self.mesh, self.rules),
-                    }
+                    shardings = self._state_shardings(params_meta,
+                                                      state)
                 state, start_step = restore_checkpoint(
                     cfg.ckpt_dir, state, shardings=shardings)
                 values, opt_state = state["values"], state["opt"]
+                if self._use_dp:
+                    # restored separately with strict=False: params/opt
+                    # stay hard-guarded above, while a checkpoint
+                    # written before the dp path existed simply has no
+                    # "err" keys — the zero-initialised state stands in
+                    err_sh = (self._state_shardings(
+                        params_meta, {"err": err_state})
+                        if self.mesh is not None else None)
+                    err_tree, _ = restore_checkpoint(
+                        cfg.ckpt_dir, {"err": err_state},
+                        step=start_step, shardings=err_sh,
+                        strict=False)
+                    err_state = err_tree["err"]
 
-        train_step = self._build_step(params_meta)
-        if self.mesh is not None:
-            shardings = dist.params_shardings(params_meta, self.mesh,
-                                              self.rules)
-            opt_sh = _opt_shardings(opt_state, params_meta, self.mesh,
-                                    self.rules)
-            train_step = jax.jit(
-                train_step, donate_argnums=(0, 1),
-                in_shardings=(shardings, opt_sh, None, None),
-                out_shardings=(shardings, opt_sh, None))
+        if self._use_dp:
+            train_step = self._build_dp_step(params_meta)
         else:
-            train_step = jax.jit(train_step, donate_argnums=(0, 1))
+            train_step = self._build_step(params_meta)
+            if self.mesh is not None:
+                shardings = dist.params_shardings(params_meta, self.mesh,
+                                                  self.rules)
+                opt_sh = _opt_shardings(opt_state, params_meta, self.mesh,
+                                        self.rules)
+                train_step = jax.jit(
+                    train_step, donate_argnums=(0, 1),
+                    in_shardings=(shardings, opt_sh, None, None),
+                    out_shardings=(shardings, opt_sh, None))
+            else:
+                train_step = jax.jit(train_step, donate_argnums=(0, 1))
 
         best_metric, stale = -np.inf, 0
         # the final checkpoint must be stamped with the step actually
@@ -163,31 +251,45 @@ class Trainer:
         # prevents the trailing save from duplicating a periodic or
         # preemption save at the same step.
         done_step, last_saved = start_step, None
+        # the dp path runs the model loss inside shard_map where
+        # sharding constraints don't apply — no ambient mesh there
         ctx = (dist.use_mesh_rules(self.mesh, self.rules)
-               if self.mesh is not None else _nullctx())
+               if self.mesh is not None and not self._use_dp
+               else _nullctx())
+        payload_mets = (self._payload_metrics(values)
+                        if self._use_dp else {})
+
+        def _ckpt_state():
+            state = {"values": values, "opt": opt_state}
+            if self._use_dp:
+                state["err"] = err_state
+            return state
+
         with ctx:
             for step in range(start_step, cfg.steps):
                 t0 = time.perf_counter()
                 batch = jax.tree.map(jnp.asarray, self.data_fn(step))
                 srng = jax.random.fold_in(rng, step)
-                values, opt_state, mets = train_step(
-                    values, opt_state, batch, srng)
+                if self._use_dp:
+                    values, opt_state, err_state, mets = train_step(
+                        values, opt_state, err_state, batch, srng)
+                else:
+                    values, opt_state, mets = train_step(
+                        values, opt_state, batch, srng)
                 done_step = step + 1
                 dt = time.perf_counter() - t0
                 self._watchdog(step, dt)
                 if step % cfg.log_every == 0 or step == cfg.steps - 1:
                     mets = {k: float(v) for k, v in mets.items()}
                     self.history.append({"step": step, **mets,
-                                         "sec": dt})
+                                         **payload_mets, "sec": dt})
                 if ckpt and cfg.ckpt_every and \
                         (step + 1) % cfg.ckpt_every == 0:
-                    ckpt.save({"values": values, "opt": opt_state},
-                              step + 1)
+                    ckpt.save(_ckpt_state(), step + 1)
                     last_saved = step + 1
                 if self._preempted:
                     if ckpt and last_saved != step + 1:
-                        ckpt.save({"values": values, "opt": opt_state},
-                                  step + 1)
+                        ckpt.save(_ckpt_state(), step + 1)
                         ckpt.wait()
                         last_saved = step + 1
                     break
@@ -207,9 +309,35 @@ class Trainer:
                                 break
         if ckpt:
             if last_saved != done_step:
-                ckpt.save({"values": values, "opt": opt_state}, done_step)
+                ckpt.save(_ckpt_state(), done_step)
             ckpt.wait()                    # drain the async writer
+        self.done_step = done_step
+        self.err_state = err_state
         return nn.with_values(params_meta, values), self.history
+
+    def _state_shardings(self, params_meta, state):
+        """Target shardings for (elastic) checkpoint restore, matching
+        whatever subtrees ``state`` carries.  The dp path keeps
+        params/opt replicated and rows the error-feedback state over
+        the data axes; the jit path reuses the logical-axis
+        resolution."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        repl = NamedSharding(self.mesh, PartitionSpec())
+        sh = {}
+        for key, tree in state.items():
+            if key == "err":
+                err_sh = NamedSharding(
+                    self.mesh, compression.dp_partition_spec(self.mesh))
+                sh[key] = jax.tree.map(lambda _: err_sh, tree)
+            elif self._use_dp:
+                sh[key] = jax.tree.map(lambda _: repl, tree)
+            elif key == "values":
+                sh[key] = dist.params_shardings(params_meta, self.mesh,
+                                                self.rules)
+            else:                                   # "opt"
+                sh[key] = _opt_shardings(tree, params_meta, self.mesh,
+                                         self.rules)
+        return sh
 
     def _watchdog(self, step, dt):
         self._step_times.append(dt)

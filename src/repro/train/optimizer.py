@@ -31,6 +31,12 @@ class OptConfig:
     warmup_steps: int = 0
     total_steps: int = 10_000
     min_lr_frac: float = 0.1
+    # data-parallel gradient exchange: "none" | "bf16" | "int8".  Under a
+    # mesh, a non-"none" method (or TrainConfig.grad_compression /
+    # grad_accum_shards) routes the Trainer through the elastic-
+    # deterministic compressed exchange (repro.dist.compression) instead
+    # of the implicit fp32 all-reduce of jit sharding.
+    grad_compression: str = "none"
 
 
 def _is_float(x) -> bool:

@@ -1,0 +1,80 @@
+"""Benchmark harness smoke: every subcommand runs in --smoke mode and
+emits well-formed JSON rows (the kernel rows double as an interpret-
+mode parity assertion for jpq_scores / jpq_lookup / embedding_bag)."""
+import json
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RUN = os.path.join(ROOT, "benchmarks", "run.py")
+
+EXPECTED = {"table2", "table45", "fig3", "fig4", "jpq_scoring",
+            "jpq_topk", "kernels", "grad_exchange"}
+
+
+def _run_smoke():
+    out = subprocess.run(
+        [sys.executable, RUN, "--smoke", "--json"],
+        capture_output=True, text=True, timeout=540,
+        env=dict(os.environ), cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout)
+
+
+class TestBenchmarkSmoke:
+    rows = None
+
+    @classmethod
+    def setup_class(cls):
+        cls.rows = _run_smoke()
+
+    def test_all_subcommands_emit_rows(self):
+        prefixes = {r["name"].split("/")[0] for r in self.rows}
+        missing = EXPECTED - prefixes
+        assert not missing, f"benches emitted no rows: {missing}"
+
+    def test_rows_well_formed(self):
+        assert self.rows, "no rows at all"
+        for r in self.rows:
+            assert set(r) == {"name", "us_per_call", "derived"}, r
+            assert isinstance(r["name"], str) and r["name"], r
+            assert r["us_per_call"] is None or \
+                isinstance(r["us_per_call"], float), r
+            assert isinstance(r["derived"], str), r
+
+    def test_kernel_rows_parity(self):
+        krows = [r for r in self.rows if r["name"].startswith("kernels/")]
+        assert len(krows) == 3, krows
+        for r in krows:
+            m = re.search(r"max_abs_err_vs_ref=([0-9.e+-]+)",
+                          r["derived"])
+            assert m, r
+            assert float(m.group(1)) < 1e-3, r
+
+    def test_grad_exchange_accounting(self):
+        rows = {r["name"]: r["derived"] for r in self.rows
+                if r["name"].startswith("grad_exchange/")}
+        assert set(rows) == {f"grad_exchange/{m}"
+                             for m in ("none", "bf16", "int8")}
+
+        def parse(d):
+            pb = int(re.search(r"payload_bytes=(\d+)", d).group(1))
+            fr = float(re.search(r"exchange_fraction=([0-9.]+)",
+                                 d).group(1))
+            return pb, fr
+
+        pb_n, fr_n = parse(rows["grad_exchange/none"])
+        pb_b, fr_b = parse(rows["grad_exchange/bf16"])
+        pb_i, fr_i = parse(rows["grad_exchange/int8"])
+        assert fr_n == 1.0 and pb_b * 2 == pb_n and pb_i * 4 == pb_n
+        assert abs(fr_b - 0.5) < 1e-6 and abs(fr_i - 0.25) < 1e-6
+
+    def test_jpq_topk_rows_exact(self):
+        rows = [r for r in self.rows
+                if r["name"].startswith("jpq_topk/") and
+                "exact_match=" in r["derived"]]
+        assert rows
+        for r in rows:
+            assert "exact_match=True" in r["derived"], r

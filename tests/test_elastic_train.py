@@ -1,0 +1,338 @@
+"""Elastic compressed-gradient training conformance suite.
+
+Pins down the four contracts of the Trainer's elastic-deterministic
+data-parallel path (docs/sharding.md §Gradient compression in the
+Trainer):
+
+  (a) compressed (bf16/int8 + error feedback) training reaches the
+      fp32 final loss within 2% over >=200 steps on an 8-device mesh;
+  (b) a launch/train.py run SIGTERM'd mid-flight on 8 devices and
+      resumed on a 4-device mesh is *bit-identical* to an uninterrupted
+      8-device run (method "none") — the full subprocess preemption
+      flow, not just tensor-level restore;
+  (c) the per-step ``payload_bytes`` metric equals
+      ``dist.compression.payload_bytes`` exactly, and the compressed
+      all-gathers visible in compiled HLO account for exactly
+      ``accum_shards x payload_bytes`` (+ the documented scale/metric
+      scalars);
+  (d) the error-feedback state round-trips through save/restore
+      including onto a differently-sized mesh, preserving the bitwise
+      trajectory for int8 too.
+
+Multi-device tests run in subprocesses so XLA_FLAGS is set before jax
+initialises (the main test process keeps the single real CPU device).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(body: str, devices: int = 8, timeout: int = 500) -> str:
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+STEPS = 40          # long enough that SIGTERM always lands mid-run
+
+
+def launch_train(args, ckpt_dir, devices):
+    """Start ``python -m repro.launch.train`` (the production
+    entrypoint) with the elastic-deterministic exchange on."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "gru4rec", "--embedding", "full",
+           "--n-items", "60", "--d-model", "16",
+           "--steps", str(STEPS),
+           "--batch-size", "32", "--ckpt-every", "3",
+           "--eval-every", "0", "--ckpt-dir", ckpt_dir,
+           "--devices", str(devices),
+           "--grad-compression", "none", "--grad-accum-shards", "8",
+           ] + args
+    return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+
+
+def _load_ckpt_arrays(ckpt_dir, step):
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "arrays.npz")
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+class TestCompressedParity:
+    def test_bf16_int8_within_2pct_of_fp32_over_200_steps(self):
+        """(a) — Trainer on an 8-device host mesh, 240 steps, noisy
+        linear regression (loss floor = noise variance, so a relative
+        tolerance is meaningful).  Error feedback must recover the
+        quantisation bias; without it int8 stalls far above the
+        floor."""
+        body = """
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.launch.mesh import make_host_mesh
+        from repro.nn.module import P
+        from repro.train.loop import TrainConfig, Trainer
+        from repro.train.optimizer import OptConfig
+
+        F = 32
+        target = jnp.asarray(np.random.default_rng(0)
+                             .standard_normal(F), jnp.float32)
+
+        class LinReg:
+            def init_params(self, rng):
+                return {"w": P(jnp.zeros(F), (None,))}
+
+            def train_loss(self, params, batch, rng=None):
+                pred = batch["x"] @ params["w"].value
+                loss = jnp.mean((pred - batch["y"]) ** 2)
+                return loss, {"loss": loss}
+
+        def data_fn(s):
+            r = np.random.default_rng(1000 + s)
+            x = r.standard_normal((64, F)).astype(np.float32)
+            y = (x @ np.asarray(target)
+                 + 0.1 * r.standard_normal(64)).astype(np.float32)
+            return {"x": x, "y": y}
+
+        mesh = make_host_mesh(8)
+        finals, errs = {}, {}
+        for method in ("none", "bf16", "int8"):
+            tr = Trainer(LinReg(), OptConfig(kind="sgd", lr=5e-2,
+                                             clip_norm=None),
+                         TrainConfig(steps=240, batch_size=64,
+                                     log_every=1, eval_every=0,
+                                     grad_compression=method,
+                                     grad_accum_shards=8),
+                         data_fn=data_fn, mesh=mesh)
+            _, hist = tr.run()
+            tail = [h["loss"] for h in hist if "loss" in h][-20:]
+            finals[method] = float(np.mean(tail))
+            errs[method] = float(max(np.abs(np.asarray(l)).max()
+                                     for l in jax.tree.leaves(
+                                         tr.err_state)))
+        print(json.dumps({"finals": finals, "errs": errs}))
+        """
+        res = json.loads(run_subprocess(body).strip().splitlines()[-1])
+        f = res["finals"]
+        assert abs(f["bf16"] - f["none"]) <= 0.02 * f["none"], f
+        assert abs(f["int8"] - f["none"]) <= 0.02 * f["none"], f
+        # error feedback is live: quantised methods carry a residual,
+        # the exact method carries none
+        assert res["errs"]["none"] == 0.0
+        assert res["errs"]["int8"] > 0.0
+        assert res["errs"]["bf16"] > 0.0
+
+
+class TestSigtermElasticResume:
+    def test_sigterm_8dev_resume_4dev_bit_identical(self):
+        """(b) — the production preemption flow: launch/train.py on 8
+        devices, SIGTERM once the first periodic checkpoint lands,
+        restart with ``--mesh 4`` on the same --ckpt-dir, and compare
+        the final checkpoint bit-for-bit against an uninterrupted
+        8-device run."""
+        with tempfile.TemporaryDirectory() as d_int, \
+                tempfile.TemporaryDirectory() as d_ref:
+            # interrupted run: SIGTERM as soon as the first periodic
+            # checkpoint lands (tight poll; the run still has ~90% of
+            # its steps ahead, so the preemption cannot be missed)
+            proc = launch_train([], d_int, devices=8)
+            deadline = time.time() + 300
+            first_ckpt = os.path.join(d_int, "step_0000000003")
+            while time.time() < deadline and proc.poll() is None:
+                if os.path.isdir(first_ckpt):
+                    break
+                time.sleep(0.05)
+            assert os.path.isdir(first_ckpt), \
+                (proc.communicate()[1] or "")[-2000:]
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGTERM)
+            out, err = proc.communicate(timeout=300)
+            assert proc.returncode == 0, err[-2000:]
+            reached = max(int(n.split("_")[1]) for n in os.listdir(d_int)
+                          if n.startswith("step_"))
+            # the conformance claim needs a real preemption — a run
+            # that finished before the signal proves nothing
+            assert reached < STEPS, \
+                f"run completed (step {reached}) before SIGTERM landed"
+            assert "preempted" in out, out
+            # elastic restart on a smaller mesh
+            proc2 = launch_train(["--mesh", "4"], d_int, devices=4)
+            out2, err2 = proc2.communicate(timeout=300)
+            assert proc2.returncode == 0, err2[-2000:]
+            assert f"done at step {STEPS}" in out2, out2
+
+            # uninterrupted reference
+            ref = launch_train([], d_ref, devices=8)
+            out_r, err_r = ref.communicate(timeout=300)
+            assert ref.returncode == 0, err_r[-2000:]
+
+            a = _load_ckpt_arrays(d_int, STEPS)
+            b = _load_ckpt_arrays(d_ref, STEPS)
+            assert sorted(a) == sorted(b)
+            assert any(k.startswith("err/") for k in a), \
+                "error-feedback state missing from the checkpoint"
+            for k in a:
+                assert a[k].dtype == b[k].dtype, k
+                assert np.array_equal(a[k], b[k]), \
+                    f"{k} diverged after elastic resume"
+
+
+class TestPayloadAccounting:
+    def test_metrics_match_payload_bytes_and_hlo(self):
+        """(c) — the per-step metric equals
+        ``compression.payload_bytes`` exactly, and lowering the
+        exchange's collect module shows all-gathers of exactly
+        ``accum_shards x payload_bytes`` compressed bytes plus the
+        documented scalar overhead (one f32 scale per tensor per shard,
+        the loss row, and the aux metric rows)."""
+        body = """
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.dist import compression
+        from repro.dist.hlo import collective_bytes
+        from repro.launch.mesh import make_host_mesh
+        from repro.nn.module import P
+        from repro.train.loop import TrainConfig, Trainer
+        from repro.train.optimizer import OptConfig
+
+        F = 24
+
+        class LinReg:
+            def init_params(self, rng):
+                return {"w": P(jnp.zeros((F, 4)), (None, None)),
+                        "b": P(jnp.zeros(4), (None,)),
+                        "codes": P(jnp.zeros(6, jnp.int32), (None,))}
+
+            def train_loss(self, params, batch, rng=None):
+                pred = batch["x"] @ params["w"].value + params["b"].value
+                loss = jnp.mean(pred ** 2)
+                return loss, {"loss": loss, "aux_probe": loss * 2}
+
+        def data_fn(s):
+            return {"x": np.ones((32, F), np.float32)}
+
+        mesh = make_host_mesh(8)
+        out = {}
+        for method in ("none", "bf16", "int8"):
+            tr = Trainer(LinReg(), OptConfig(kind="sgd", lr=1e-2),
+                         TrainConfig(steps=2, batch_size=32,
+                                     log_every=1, eval_every=0,
+                                     grad_compression=method,
+                                     grad_accum_shards=8),
+                         data_fn=data_fn, mesh=mesh)
+            _, hist = tr.run()
+            values = {"w": jnp.zeros((F, 4)), "b": jnp.zeros(4),
+                      "codes": jnp.zeros(6, jnp.int32)}
+            pb = compression.payload_bytes(values, method)
+            full = compression.payload_bytes(values, "none")
+            row = [h for h in hist if "payload_bytes" in h][-1]
+
+            # HLO: lower the collect module and parse collective bytes
+            def loss_fn(v, b, rng):
+                pred = b["x"] @ v["w"] + v["b"]
+                loss = jnp.mean(pred ** 2)
+                return loss, {"loss": loss, "aux_probe": loss * 2}
+            step = compression.make_elastic_dp_step(
+                loss_fn, mesh, method, accum_shards=8, has_aux=True,
+                with_rng=True)
+            err = compression.zeros_error_state(values, 8)
+            rows = {"x": jnp.zeros((8, 4, F), jnp.float32)}
+            lowered = step.collect.lower(
+                values, err, rows, jax.random.PRNGKey(0), jnp.int32(0))
+            hlo = lowered.compile().as_text()
+            coll = collective_bytes(hlo)
+            out[method] = {
+                "metric_pb": row["payload_bytes"],
+                "metric_frac": row["exchange_fraction"],
+                "metric_shards": row["exchange_shards"],
+                "payload_bytes": pb,
+                "fraction": pb / full,
+                "ag_bytes": coll["per_op_bytes"].get("all-gather", 0),
+            }
+        print(json.dumps(out))
+        """
+        res = json.loads(run_subprocess(body).strip().splitlines()[-1])
+        V = 8
+        n_leaves, n_aux = 3, 2          # w, b, codes; loss + aux_probe
+        # payload_bytes counts the compressed dtype — what TPU ships.
+        # The XLA *CPU* backend normalises bf16 collectives to f32
+        # (2x), which the wire-byte expectation has to mirror here;
+        # int8 stays s8 on every backend.
+        wire_factor = {"none": 1, "bf16": 2, "int8": 1}
+        for method, r in res.items():
+            assert r["metric_pb"] == r["payload_bytes"], (method, r)
+            assert r["metric_frac"] == r["fraction"], (method, r)
+            assert r["metric_shards"] == V, (method, r)
+            # collect all-gathers: V x compressed payload + V f32
+            # scalars per grad leaf (scales) + the loss row + aux rows
+            expected = V * r["payload_bytes"] * wire_factor[method]
+            slack = V * 4 * (n_leaves + 1 + n_aux)
+            assert expected <= r["ag_bytes"] <= expected + slack, \
+                (method, r)
+        # and compression really shrinks the wire bytes end to end
+        assert res["int8"]["ag_bytes"] < res["none"]["ag_bytes"] / 2
+
+
+class TestErrorStateRoundTrip:
+    def test_err_state_restores_across_remesh_bitwise(self):
+        """(d) — int8 run checkpointed mid-flight on an 8-device mesh
+        and resumed on 4 devices continues bit-identically: the
+        error-feedback rows are virtual-shard-indexed, so the re-mesh
+        only re-lays them out."""
+        body = """
+        import tempfile, shutil, jax, jax.numpy as jnp, numpy as np
+        from repro.data.sequences import SeqDataConfig, SyntheticSequences
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.sequential import SeqRecConfig, SeqRecModel
+        from repro.train.loop import TrainConfig, Trainer
+        from repro.train.optimizer import OptConfig
+        from repro.ckpt import latest_step
+
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        data = SyntheticSequences(SeqDataConfig(n_users=40, n_items=30,
+                                                seq_len=8))
+
+        def run(mesh_n, steps, td, method):
+            tr = Trainer(SeqRecModel(cfg), OptConfig(lr=1e-2),
+                         TrainConfig(steps=steps, batch_size=32,
+                                     ckpt_dir=td, ckpt_every=3,
+                                     log_every=1, eval_every=0,
+                                     grad_compression=method,
+                                     grad_accum_shards=8),
+                         data_fn=lambda s: data.train_batch(s, 32),
+                         mesh=make_host_mesh(mesh_n))
+            params, _ = tr.run()
+            return tr, params
+
+        for method in ("int8", "bf16"):
+            dA, dB = tempfile.mkdtemp(), tempfile.mkdtemp()
+            _, pA = run(8, 6, dA, method)           # uninterrupted
+            trB, _ = run(8, 3, dB, method)          # first half on 8
+            errB = jax.tree.leaves(trB.err_state)
+            assert any(np.abs(np.asarray(e)).max() > 0 for e in errB)
+            _, pB = run(4, 6, dB, method)           # resume on 4
+            va = [np.asarray(p.value) for p in jax.tree.leaves(
+                pA, is_leaf=lambda x: hasattr(x, "value"))]
+            vb = [np.asarray(p.value) for p in jax.tree.leaves(
+                pB, is_leaf=lambda x: hasattr(x, "value"))]
+            assert all(np.array_equal(a, b) for a, b in zip(va, vb)), \
+                method
+            assert latest_step(dB) == 6
+            shutil.rmtree(dA); shutil.rmtree(dB)
+        print("OK")
+        """
+        assert "OK" in run_subprocess(body)

@@ -74,6 +74,89 @@ class TestCheckpoint:
             with pytest.raises(KeyError):
                 restore_checkpoint(d, {"other": jnp.ones(2)})
 
+    def test_missing_key_nonstrict_keeps_like_leaf(self):
+        """strict=False: keys absent from the checkpoint keep the
+        ``like`` value — how the Trainer resumes a pre-dp-path
+        checkpoint with zero-initialised error-feedback state."""
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, {"w": jnp.ones(2)}, 1)
+            like = {"w": jnp.zeros(2), "err": jnp.full(3, 7.0)}
+            restored, step = restore_checkpoint(d, like, strict=False)
+            np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                          [1, 1])
+            np.testing.assert_array_equal(np.asarray(restored["err"]),
+                                          [7, 7, 7])
+
+    def test_shape_mismatch_raises(self):
+        """A re-mesh restore must never silently re-lay-out a
+        wrong-shaped leaf (e.g. grad_accum_shards changed between
+        runs)."""
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, {"e": jnp.zeros((8, 4))}, 1)
+            with pytest.raises(ValueError, match="shape"):
+                restore_checkpoint(d, {"e": jnp.zeros((4, 4))})
+
+    def test_save_while_previous_save_in_flight(self, monkeypatch):
+        """save() must drain the in-flight write before starting the
+        next one — interleaved async saves land in order and GC sees
+        every step."""
+        import time as _time
+
+        from repro.ckpt import checkpoint as ck_mod
+
+        orig = ck_mod.save_checkpoint
+        calls = []
+
+        def slow_save(directory, tree, step, **kw):
+            calls.append(("start", step))
+            if step == 1:
+                _time.sleep(0.3)
+            out = orig(directory, tree, step, **kw)
+            calls.append(("end", step))
+            return out
+
+        monkeypatch.setattr(ck_mod, "save_checkpoint", slow_save)
+        t = {"w": jnp.ones(2)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d, keep=3)
+            ck.save(t, 1)
+            ck.save(t, 2)               # must block on 1 first
+            ck.wait()
+            assert latest_step(d) == 2
+            assert calls == [("start", 1), ("end", 1),
+                             ("start", 2), ("end", 2)]
+
+    def test_wait_after_failure_raises_once_then_recovers(self, tmp_path):
+        """A failed async write surfaces on the next wait() exactly
+        once; the checkpointer is reusable afterwards."""
+        blocker = tmp_path / "not_a_dir"
+        blocker.write_text("file where the ckpt dir should be")
+        ck = AsyncCheckpointer(str(blocker), keep=2)
+        ck.save({"w": jnp.ones(2)}, 1)
+        with pytest.raises(OSError):
+            ck.wait()
+        ck.wait()                       # error was consumed — no raise
+        # a save() after a failure also surfaces the error exactly once
+        ck.save({"w": jnp.ones(2)}, 2)
+        with pytest.raises(OSError):
+            ck.wait()
+        good = tmp_path / "ckpt"
+        ck2 = AsyncCheckpointer(str(good), keep=2)
+        ck2.save({"w": jnp.ones(2)}, 3)
+        ck2.wait()
+        assert latest_step(str(good)) == 3
+
+    def test_gc_keep_honoured_under_interleaved_async_saves(self):
+        t = {"w": jnp.ones(2)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d, keep=2)
+            for s in range(1, 6):
+                ck.save(t, s)           # each drains the previous one
+            ck.wait()
+            steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                           if n.startswith("step_"))
+            assert steps == [4, 5]
+
 
 class TestMetrics:
     def test_rank_of(self):
@@ -290,6 +373,31 @@ class TestTrainerIntegration:
             -np.mean(per_slice), rel=1e-6)
         # ...and nothing beyond "loss" is dropped on the floor
         assert "probe" in mets and "grad_norm" in mets and "lr" in mets
+
+    def test_grad_compression_requires_mesh(self):
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        with pytest.raises(ValueError, match="mesh"):
+            Trainer(SeqRecModel(cfg), OptConfig(),
+                    TrainConfig(grad_compression="int8"),
+                    data_fn=None)
+
+    def test_grad_compression_rejects_microbatches(self):
+        import jax as _jax
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        mesh = _jax.make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(ValueError, match="microbatches"):
+            Trainer(SeqRecModel(cfg), OptConfig(),
+                    TrainConfig(grad_compression="bf16", microbatches=2),
+                    data_fn=None, mesh=mesh)
+
+    def test_unknown_grad_compression_rejected(self):
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        with pytest.raises(ValueError, match="unknown"):
+            Trainer(SeqRecModel(cfg), OptConfig(),
+                    TrainConfig(grad_compression="fp4"), data_fn=None)
 
     def test_microbatch_grad_accumulation_matches(self):
         """2 microbatches ~= full batch (same data, mean loss)."""
