@@ -34,9 +34,20 @@ import json
 import os
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# the jpq_topk mesh rows shard the catalogue over 8 host devices; the
+# flag must land before jax initialises.  Unsharded benches still run
+# on device 0, but splitting the host does shift absolute CPU walls a
+# little — every number quoted in docs/EXPERIMENTS was (re)measured
+# under this flag, so compare like with like
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -289,6 +300,59 @@ def jpq_topk_bench(fast: bool = True):
              f"skipped_tile_frac={frac:.3f};"
              f"speedup_vs_fused={us_base / us_prn:.2f}x;"
              f"exact_match={exact}")
+
+        # ---- mesh-native pruned serving: permute-then-shard + cross-
+        # shard threshold exchange (+ EMA warm start) on an 8-way
+        # model mesh — skip fraction aggregated across shards must
+        # track the unsharded permuted sweep (docs/serving.md)
+        from repro import dist
+        from repro.core import sharded
+        shards = 8
+        if N % shards or jax.device_count() < shards:
+            # a caller-preset XLA_FLAGS can pin fewer host devices;
+            # skip the mesh rows rather than abort the whole bench
+            continue
+        mesh = jax.make_mesh((1, shards), ("data", "model"))
+        local_n = N // shards
+        bn_m = tops.mesh_prune_block_n(
+            N, shards, target=min(8192, max(128, local_n // 8)))
+        state_m = tops.prepare_pruning(codes_p, b, bn_m, perm=perm)
+        jax.block_until_ready(state_m)    # built ONCE per catalogue
+        nt_loc = local_n // bn_m
+        with dist.use_mesh_rules(mesh):
+            f_mesh = jax.jit(lambda l, c: sharded.fused_topk_over_codes(
+                l, c, k, prune=state_m, return_stats=True))
+            f_warm = jax.jit(
+                lambda l, c, w: sharded.fused_topk_over_codes(
+                    l, c, k, prune=state_m, warm=w, return_stats=True))
+            mv, mi, mstats = jax.block_until_ready(
+                f_mesh(lut, codes_p))
+            us_mesh = time_fn(f_mesh, lut, codes_p, iters=5, warmup=0)
+            warm_vec = mstats["theta"]    # EMA seed: previous request θ
+            wv, wi, wstats = jax.block_until_ready(
+                f_warm(lut, codes_p, warm_vec))
+            us_warm = time_fn(f_warm, lut, codes_p, warm_vec, iters=5,
+                              warmup=0)
+        m_exact = bool(np.array_equal(np.asarray(rv), np.asarray(mv))
+                       and np.array_equal(np.asarray(ri), np.asarray(mi)))
+        w_exact = bool(np.array_equal(np.asarray(rv), np.asarray(wv))
+                       and np.array_equal(np.asarray(ri), np.asarray(wi)))
+        m_frac = float(mstats["skipped_tiles"]) / float(
+            mstats["total_tiles"])
+        w_frac = float(wstats["skipped_tiles"]) / float(
+            wstats["total_tiles"])
+        t_ex = int(np.asarray(wstats["exchange_tiles"]))
+        first = max(t_ex, 1)              # pre-exchange window
+        skv = np.asarray(wstats["skips"]).reshape(shards, nt_loc)
+        w_first = float(skv[:, :first].sum())
+        _row(f"jpq_topk/N={N}/mesh8_pruned", f"{us_mesh:.0f}",
+             f"skipped_tile_frac={m_frac:.3f};"
+             f"delta_vs_unsharded={m_frac - frac:+.3f};"
+             f"exact_match={m_exact}")
+        _row(f"jpq_topk/N={N}/mesh8_warm", f"{us_warm:.0f}",
+             f"skipped_tile_frac={w_frac:.3f};"
+             f"first_window_skips={w_first:.0f}/{shards * first};"
+             f"exact_match={w_exact}")
 
 
 # ---------------------------------------------- Pallas kernel suite

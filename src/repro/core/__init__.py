@@ -7,5 +7,6 @@ Public surface:
   jpq / full / qr submodules        - the three embedding implementations
 """
 from repro.core.api import EmbeddingConfig, Embedding, make_embedding  # noqa: F401
-from repro.core.assign import build_codebook, popularity_permutation  # noqa: F401
-from repro.core.serve import retrieve_topk  # noqa: F401
+from repro.core.assign import (build_codebook,  # noqa: F401
+                               popularity_permutation, shard_sweep_ids)
+from repro.core.serve import ThresholdState, retrieve_topk  # noqa: F401

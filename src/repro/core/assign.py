@@ -135,6 +135,26 @@ def popularity_permutation(counts=None, *, interactions=None,
     return np.argsort(-counts, kind="stable")
 
 
+def shard_sweep_ids(perm: np.ndarray, shards: int) -> np.ndarray:
+    """Permute-then-shard id layout: the per-shard id-maps a mesh-native
+    pruned sweep serves under (docs/serving.md §pruning).
+
+    The GLOBAL popularity permutation is applied to the catalogue rows
+    first and only then row-split into ``shards`` contiguous blocks, so
+    shard ``s`` sweeps ``perm[s·L:(s+1)·L]`` (L = n_items/shards) — its
+    own rows in descending-popularity order — and its candidate list
+    maps sweep positions back to original ids through this slice.
+    Returns ``[shards, L]``: row s is shard s's id-map.  This is
+    exactly how ``prepare_pruning(codes, b, bn, perm=perm)``'s
+    ``ids`` array row-slices under ``core.sharded.fused_topk_over_codes``
+    (asserted by tests/test_mesh_perm.py)."""
+    perm = np.asarray(perm)
+    n = perm.shape[0]
+    if n % shards != 0:
+        raise ValueError(f"{n} rows do not split over {shards} shards")
+    return perm.reshape(shards, n // shards)
+
+
 # ------------------------------------------------------------- factory
 
 def build_codebook(strategy: str, n_items: int, m: int, b: int = 256, *,

@@ -19,22 +19,75 @@ the reference path for any kind — the parity hook the serve tests use.
 ``prune`` turns on score-bound dynamic pruning of code tiles (bit-exact
 — see docs/serving.md): pass True, or a precomputed
 ``kernels.jpq_topk.prepare_pruning(...)`` state so the per-request jit
-does no codes-only work; ``perm`` optionally sweeps the catalogue in
-popularity order (``core.assign.popularity_permutation``) so the
-threshold tightens early.  Both are JPQ-fused-path-only knobs.
+does no codes-only work (under a mesh, build it with
+``mesh_prune_block_n`` so one global permute-then-shard state row-slices
+cleanly); ``perm`` optionally sweeps the catalogue in popularity order
+(``core.assign.popularity_permutation``) so the threshold tightens
+early; ``warm`` floors the sweep from tile 0 with an EMA of past
+requests' final thresholds (``ThresholdState`` below — verified
+admissible, demoted when it overshoots).  All are JPQ-fused-path-only
+knobs.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from repro import dist
 from repro.core import jpq as _jpq
 from repro.core import sharded
 
 
+class ThresholdState:
+    """Host-side EMA of the final pruning threshold θ across requests.
+
+    The first tiles of a cold request cannot prune (the running k-th
+    value is -inf until k candidates have been seen).  Serving replicas
+    keep one ThresholdState per (model, k) and pass ``floor(B)`` as the
+    ``warm=`` argument: the sweep then prunes from tile 0 against the
+    EMA of past requests' final k-th values.  The floor is a *candidate
+    floor only* — it never enters the running list, the sweep verifies
+    it against the final k-th value, and overshooting queries are
+    demoted and re-swept — so results stay bit-exact for ANY seed.
+
+    ``update`` takes the ``theta`` entry of the request's pruning stats
+    (= the final per-query k-th values) and folds their MINIMUM into
+    the EMA — the conservative end of the batch, so the floor
+    undershoots (loses a little pruning) rather than overshoots (costs
+    a demotion re-sweep).  Host-side numpy, like every other serving
+    artefact; keep it outside jit and feed ``floor`` in as a traced
+    argument so EMA updates never retrigger compilation.
+    """
+
+    def __init__(self, decay: float = 0.9):
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(
+                f"decay must be in [0, 1): {decay} (1.0 would freeze "
+                f"the EMA at its first value forever)")
+        self.decay = float(decay)
+        self.theta: float | None = None
+
+    def floor(self, batch_size: int) -> np.ndarray:
+        """[batch_size] f32 warm floor (-inf until the first update)."""
+        fill = -np.inf if self.theta is None else self.theta
+        return np.full((batch_size,), fill, np.float32)
+
+    def update(self, thetas) -> None:
+        t = float(np.min(np.asarray(thetas)))
+        if not np.isfinite(t):
+            return
+        self.theta = t if self.theta is None else \
+            self.decay * self.theta + (1.0 - self.decay) * t
+
+
 def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
                   block_n: int | None = None, backend: str | None = None,
-                  prune=None, perm=None):
+                  prune=None, perm=None, warm=None,
+                  return_stats: bool = False):
     """emb: core.api.Embedding, p: its params, h [..., d] query vectors
-    -> (values, ids) [..., min(k, n_items)] over the whole catalogue."""
+    -> (values, ids) [..., min(k, n_items)] over the whole catalogue
+    (+ a pruning-stats dict — skip counts and the final per-query
+    threshold ``theta`` a ``ThresholdState`` EMAs — when
+    ``return_stats``, pruned JPQ path only)."""
     lead = h.shape[:-1]
     B = 1
     for s in lead:
@@ -42,10 +95,16 @@ def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
     if fused and emb.cfg.kind == "jpq":
         part = _jpq.partial_scores(p, h)                 # [..., m, b]
         part2 = part.reshape(B, *part.shape[len(lead):])
-        v, i = sharded.fused_topk_over_codes(
+        out = sharded.fused_topk_over_codes(
             part2, p["codes"].value, k, block_n=block_n, backend=backend,
-            prune=prune, perm=perm)
+            prune=prune, perm=perm, warm=warm, return_stats=return_stats)
+        if return_stats:
+            v, i, stats = out
+            return v.reshape(*lead, -1), i.reshape(*lead, -1), stats
+        v, i = out
     else:
+        assert warm is None and not return_stats, \
+            "warm floors / stats are pruned-JPQ-fused-path features"
         scores = emb.logits(p, h.reshape(B, -1))         # [B, N]
         scores = dist.constrain(scores, ("batch", "items"))
         v, i = sharded.topk_over_items(scores, int(k))

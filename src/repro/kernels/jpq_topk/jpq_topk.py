@@ -15,11 +15,16 @@ tile scores ``S [Bt, Nt]`` in registers/VMEM; padding columns (N not a
 multiple of block_n) are masked to −inf against the *global* item id;
 then the running list is merged by one ``top_k`` over the concatenated
 ``[Bt, k + Nt]`` candidates.  One-hot picks are exact (x·1 + Σ 0), so
-fused scores are bit-identical to the gather reference — with one
-domain caveat: a ``-0.0`` LUT entry sums to ``+0.0`` through the dot
-(−0.0 + 0.0 = +0.0) while a gather keeps the sign, and ``lax.top_k``'s
-IEEE total order ranks +0.0 above −0.0; real inner-product LUTs don't
-produce −0.0.
+fused scores are bit-identical to the gather reference.  Signed zeros:
+the public entrypoints (``ops.jpq_topk`` / ``ops.jpq_topk_lut``)
+canonicalise ``-0.0 → +0.0`` in the LUT before it reaches any backend
+— the one-hot MXU dot flattens ``-0.0`` to ``+0.0`` (−0.0 + 0.0 =
++0.0) while a gather keeps the sign, and ``lax.top_k``'s IEEE total
+order ranks +0.0 above −0.0, so without canonicalisation the backends
+could disagree on signed-zero ties.  With it, a zero score is +0.0 in
+every backend and ±0.0 ties resolve by the id tie-break, identical to
+the materialise reference over the canonicalised LUT (the scores are
+numerically unchanged: −0.0 == +0.0).
 
 Grid: ``(B/Bt, N/Nt)`` with the item dim innermost and *sequential*
 ("arbitrary" semantics): the output blocks are revisited at every item
@@ -41,7 +46,15 @@ upper bound ``ub = Σ_j max{P[j, c] : c in tile}`` beating the running
 k-th value read from the revisited output block — most tiles of a
 popularity-ordered catalogue are skipped exactly, with zero effect on
 the result (an item's score never exceeds the bound, and an equal
-score loses the id tie-break).
+score loses the id tie-break).  Two extras serve the mesh / warm-start
+paths (docs/serving.md §pruning): ``floor [B]`` is a per-query
+*candidate floor* — tiles whose bound falls strictly below it are also
+skipped (admissible when the floor is ≤ the final k-th value: the
+caller either derives it from real running scores via the cross-shard
+exchange, or verifies it post hoc and demotes) — and ``init_vals`` /
+``init_ids`` seed the running list at the first tile so a sweep can be
+resumed across phases (the cross-shard threshold exchange splits one
+sweep into two kernel launches).
 
 VMEM per step (Bt=256, Nt=512, m=8, b=256, k=128):
   P tile   256·8·256·4 = 2.0 MiB     one-hot 256·512·4 = 0.5 MiB
@@ -151,13 +164,20 @@ def _kernel(p_ref, codes_ref, vals_ref, ids_ref, *, m: int, b: int,
     ids_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
 
 
-def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, vals_ref, ids_out_ref,
-                   skip_ref, *, m: int, b: int, k: int, block_n: int,
-                   n_items: int, n_batch: int, tie_break_ids: bool):
+def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, floor_ref, iv_ref,
+                   ii_ref, vals_ref, ids_out_ref, skip_ref, *, m: int,
+                   b: int, k: int, block_n: int, n_items: int,
+                   n_batch: int, tie_break_ids: bool):
     # p_ref:    [Bt, m, b]   fp32 LUT tile (same block for every n step)
     # codes_ref:[Nt, m]      int32 codes tile, in sweep order
     # ids_ref:  [Nt, 1]      int32 ORIGINAL item id of each sweep row
     # pres_ref: [1, m, b]    fp32 0/1 — code c occurs in this tile, split j
+    # floor_ref:[Bt, 1]      fp32 per-query candidate floor (-inf = none;
+    #                        padded batch rows carry +inf so they never
+    #                        demand a tile the real rows would skip)
+    # iv_ref/ii_ref: [Bt, k] running-list seed written at n == 0 (-inf/0
+    #                        for a cold sweep; the previous phase's lists
+    #                        when resuming across a threshold exchange)
     # vals_ref / ids_out_ref: [Bt, k] running top-k (revisited across n)
     # skip_ref: [1, 1]       int32 1 iff this (i, n) tile was skipped
     i = pl.program_id(0)
@@ -165,8 +185,8 @@ def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, vals_ref, ids_out_ref,
 
     @pl.when(n == 0)
     def _init():
-        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
-        ids_out_ref[...] = jnp.zeros(ids_out_ref.shape, jnp.int32)
+        vals_ref[...] = iv_ref[...]
+        ids_out_ref[...] = ii_ref[...]
 
     # ---- score-bound: ub[t] = sum_j max{P[j, c] : c present in tile}.
     # Any item in the tile scores <= ub (its codes are all present), so
@@ -186,8 +206,12 @@ def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, vals_ref, ids_out_ref,
     # running entry (all from earlier tiles = smaller ids), so strict >
     # is required to enter.  Under a permutation ties break on original
     # id, so an equal-score smaller-id item CAN enter: keep >= tiles.
-    need = (jnp.any(ub >= theta) if tie_break_ids
-            else jnp.any(ub > theta))
+    ok = (ub >= theta) if tie_break_ids else (ub > theta)
+    # the candidate floor is always strict-skip (ub == floor could tie
+    # the final k-th value and win on id), and combines per ROW before
+    # the any-reduce: a row whose bound clears its own θ but not the
+    # floor must not demand the tile for everyone else.
+    need = jnp.any(ok & (ub >= floor_ref[:, 0]))
     skip_ref[0, 0] = jnp.where(need, 0, 1).astype(jnp.int32)
 
     @pl.when(need)
@@ -224,9 +248,10 @@ def _kernel_pruned(p_ref, codes_ref, ids_ref, pres_ref, vals_ref, ids_out_ref,
 @functools.partial(jax.jit, static_argnames=("k", "n_items", "n_batch",
                                              "block_b", "block_n",
                                              "tie_break_ids", "interpret"))
-def jpq_topk_tiles_pruned(partial, codes, ids, present, *, k: int,
-                          n_items: int, n_batch: int, block_b: int = 256,
-                          block_n: int = 512, tie_break_ids: bool = False,
+def jpq_topk_tiles_pruned(partial, codes, ids, present, floor, init_vals,
+                          init_ids, *, k: int, n_items: int, n_batch: int,
+                          block_b: int = 256, block_n: int = 512,
+                          tie_break_ids: bool = False,
                           interpret: bool = False):
     """Score-bound dynamically-pruned variant of ``jpq_topk_tiles``.
 
@@ -234,16 +259,25 @@ def jpq_topk_tiles_pruned(partial, codes, ids, present, *, k: int,
     when unpermuted), ``present [N/block_n, m, b]`` 0/1 presence of each
     code in each tile (built from the UNPADDED codes; padding rows
     contribute nothing, which only loosens nothing — they are masked by
-    position).  ``n_batch`` is the real (unpadded) batch size.  Returns
-    (values [B, k], ids [B, k], skipped [B/Bt, N/Nt] int32 tile-skip
-    map).  Bit-exact vs the materialise reference: bounds only ever
-    skip tiles that provably cannot enter the top-k."""
+    position), ``floor [B, 1]`` per-query candidate floor (-inf for a
+    plain sweep; +inf on padded batch rows), ``init_vals`` /
+    ``init_ids [B, k]`` the running-list seed (-inf / 0 cold, the prior
+    phase's lists when resuming).  ``n_batch`` is the real (unpadded)
+    batch size.  Returns (values [B, k], ids [B, k], skipped
+    [B/Bt, N/Nt] int32 tile-skip map).  Bit-exact vs the materialise
+    reference whenever every floor is ≤ the final k-th value (always
+    true for -inf floors and exchange-derived floors; warm-start floors
+    are verified and demoted by the caller)."""
     B, m, b = partial.shape
     N = codes.shape[0]
     assert B % block_b == 0 and N % block_n == 0, (B, N, block_b, block_n)
-    assert 0 < k <= n_items <= N, (k, n_items, N)
+    # k may exceed n_items on a phased SUB-sweep (the running list keeps
+    # its full width while a phase covers only a slice of the rows)
+    assert 0 < k and 0 < n_items <= N, (k, n_items, N)
     grid = (B // block_b, N // block_n)
     assert present.shape == (grid[1], m, b), (present.shape, grid)
+    assert floor.shape == (B, 1) and init_vals.shape == (B, k), \
+        (floor.shape, init_vals.shape)
     return pl.pallas_call(
         functools.partial(_kernel_pruned, m=m, b=b, k=k, block_n=block_n,
                           n_items=n_items, n_batch=n_batch,
@@ -254,6 +288,9 @@ def jpq_topk_tiles_pruned(partial, codes, ids, present, *, k: int,
             pl.BlockSpec((block_n, m), lambda i, n: (n, 0)),
             pl.BlockSpec((block_n, 1), lambda i, n: (n, 0)),
             pl.BlockSpec((1, m, b), lambda i, n: (n, 0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, n: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, n: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, n: (i, 0)),
         ],
         out_specs=(
             pl.BlockSpec((block_b, k), lambda i, n: (i, 0)),
@@ -270,7 +307,9 @@ def jpq_topk_tiles_pruned(partial, codes, ids, present, *, k: int,
         interpret=interpret,
         name="jpq_topk_pruned",
     )(partial.astype(jnp.float32), codes.astype(jnp.int32),
-      ids.astype(jnp.int32), present.astype(jnp.float32))
+      ids.astype(jnp.int32), present.astype(jnp.float32),
+      floor.astype(jnp.float32), init_vals.astype(jnp.float32),
+      init_ids.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_items", "block_b",

@@ -25,11 +25,28 @@ query LUT skip tiles that provably cannot enter the top-k — see
 build a ``PruneState`` ONCE via ``prepare_pruning`` and pass it, so
 the per-request jit does none of that O(N·m) work.  Results are
 bit-exact vs the unpruned path in every mode, permuted or not.
+
+Warm start (``warm=``, pruned path only): a per-query (or scalar)
+candidate floor — typically an EMA of past requests' final k-th
+values (``core.serve.ThresholdState``) — lets the FIRST tiles of a
+request prune before the running list has warmed.  The floor never
+enters the list; it only strict-skips tiles whose bound falls below
+it.  Admissibility is verified post hoc: if a query ends with fewer
+than k scores ≥ its floor, the floor overshot the true k-th value and
+the sweep is re-run with that query's floor demoted to -inf
+(``lax.cond`` — one extra sweep only when the EMA overshoots), so the
+result stays bit-exact unconditionally.
+
+Signed zeros: both entrypoints canonicalise ``-0.0 → +0.0`` in the
+LUT (numerically identical scores) — the one-hot MXU dot flattens the
+sign while a gather keeps it, and ``lax.top_k``'s IEEE total order
+splits ±0.0 ties — so every backend agrees bit-for-bit with the
+materialise reference over the canonicalised LUT, ±0.0 ties included.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Union
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -101,9 +118,24 @@ def _resolve_prune(prune, perm, codes, b: int, block_n: int):
     return prepare_pruning(codes, b, block_n, perm=perm)
 
 
+def canonicalise_lut(partial):
+    """-0.0 -> +0.0, numerically a no-op (−0.0 == +0.0): pins the
+    signed-zero tie order to the id tie-break in every backend (the
+    one-hot MXU dot flattens the sign of zero anyway)."""
+    return jnp.where(partial == 0.0, 0.0, partial)
+
+
+def _as_floor(warm, B: int):
+    """warm (None | scalar | [B]) -> per-query f32 floor [B] or None."""
+    if warm is None:
+        return None
+    return jnp.broadcast_to(jnp.asarray(warm, jnp.float32), (B,))
+
+
 def jpq_topk(h, centroids, codes, k: int, *, block_b: int = 256,
              block_n: int | None = None, backend: str | None = None,
-             prune: Union[bool, PruneState, None] = None, perm=None):
+             prune: Union[bool, PruneState, None] = None, perm=None,
+             warm=None):
     """h [..., d], centroids [m, b, dk], codes [N, m] ->
     (values, ids) [..., min(k, N)] — top-k catalogue retrieval without
     materialising the [..., N] score matrix."""
@@ -116,14 +148,14 @@ def jpq_topk(h, centroids, codes, k: int, *, block_b: int = 256,
     partial = jnp.einsum("bmk,mck->bmc", h2, centroids.astype(jnp.float32))
     v, i = jpq_topk_lut(partial, codes, k, block_b=block_b,
                         block_n=block_n, backend=backend, prune=prune,
-                        perm=perm)
+                        perm=perm, warm=warm)
     return v.reshape(*lead, -1), i.reshape(*lead, -1)
 
 
 def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
                  block_n: int | None = None, backend: str | None = None,
                  prune: Union[bool, PruneState, None] = None, perm=None,
-                 return_stats: bool = False):
+                 warm=None, return_stats: bool = False):
     """partial [B, m, b] fp32, codes [N, m] -> (values, ids)
     [B, min(k, N)].  block_n=None picks the backend's native tile:
     VMEM-sized (512) for the kernel, a dispatch-amortising near-divisor
@@ -133,8 +165,12 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
     ``prune``: falsy = the PR 2 paths, True = build a PruneState inline,
     or a precomputed ``prepare_pruning(...)`` result.  ``perm``: optional
     [N] sweep permutation (original item id per sweep position; only
-    meaningful with prune).  ``return_stats=True`` appends a dict with
-    ``skipped_tiles`` / ``total_tiles`` (jnp scalars; pruned paths only).
+    meaningful with prune).  ``warm``: optional scalar or [B] candidate
+    floor (pruned path only) — see the module docstring's warm-start /
+    demotion contract.  ``return_stats=True`` appends a dict with
+    ``skipped_tiles`` / ``total_tiles`` / ``skips`` (per-tile skip
+    vector) / ``theta`` (final per-query k-th value — the quantity a
+    ``ThresholdState`` EMAs); jnp values, pruned paths only.
     """
     if backend is None:
         backend = "pallas" if _on_tpu() else "scan"
@@ -142,12 +178,13 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
     N = codes.shape[0]
     k = min(int(k), N)
     assert k > 0 and backend in ("pallas", "interpret", "scan"), (k, backend)
+    partial = canonicalise_lut(partial.astype(jnp.float32))
     if not prune:
         assert not return_stats, "stats are a pruned-path feature"
+        assert warm is None, "warm floors are a pruned-path feature"
         if backend == "scan":
             bn = block_n or scan_block_n(N)
-            return _jpq_topk_scan(partial.astype(jnp.float32),
-                                  codes.astype(jnp.int32), k=k,
+            return _jpq_topk_scan(partial, codes.astype(jnp.int32), k=k,
                                   block_n=min(bn, _ceil_mult(N, 128)))
         bb = min(block_b, _ceil_mult(B, 8))
         bn = min(block_n or 512, _ceil_mult(N, 128))
@@ -158,30 +195,85 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
                               block_n=bn, interpret=backend == "interpret")
         return v[:B], i[:B]
 
+    # a prebuilt state's own tile size wins over the backend default
+    # (an explicit block_n still forces a rebuild): a replica serving a
+    # mesh-built state unsharded must not silently re-scatter the
+    # O(N·m) presence mask inside the per-request jit
+    if block_n is None and isinstance(prune, PruneState):
+        block_n = prune.block_n
     if backend == "scan":
         bn = min(block_n or prune_block_n(N), _ceil_mult(N, 128))
-        st = _resolve_prune(prune, perm, codes, b, bn)
-        v, i, skipped, total = _jpq_topk_scan_pruned(
-            partial.astype(jnp.float32), st.codes, st.ids, st.present,
-            k=k, block_n=bn, tie_break_ids=st.tie_break_ids)
     else:
-        bb = min(block_b, _ceil_mult(B, 8))
         bn = min(block_n or 512, _ceil_mult(N, 128))
-        st = _resolve_prune(prune, perm, codes, b, bn)
-        Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, bn)
-        partial_p = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
-        codes_p = jnp.pad(st.codes, ((0, Np - N), (0, 0)))
-        ids_p = jnp.pad(st.ids, (0, Np - N))[:, None]
-        v, i, skips = jpq_topk_tiles_pruned(
-            partial_p, codes_p, ids_p, st.present, k=k, n_items=N,
-            n_batch=B, block_b=bb, block_n=bn,
-            tie_break_ids=st.tie_break_ids,
-            interpret=backend == "interpret")
-        v, i = v[:B], i[:B]
-        skipped, total = jnp.sum(skips), skips.size
+    st = _resolve_prune(prune, perm, codes, b, bn)
+    floor = _as_floor(warm, B)
+
+    def sweep(fl):
+        return pruned_sweep(partial, st, k, block_n=bn, backend=backend,
+                            block_b=block_b, floor=fl)
+
+    if floor is None:
+        v, i, skips = sweep(None)
+    else:
+        # demotion rule: a floor is only admissible when ≤ the true
+        # k-th value; v1[:, -1] ≥ floor certifies exactly that (list
+        # values are real scores, so v1[:, -1] ≤ the true k-th).
+        v1, i1, s1 = sweep(floor)
+        ok = v1[:, -1] >= floor
+        v, i, skips = jax.lax.cond(
+            jnp.all(ok), lambda c: c,
+            lambda c: sweep(jnp.where(ok, floor, -jnp.inf)),
+            (v1, i1, s1))
     if return_stats:
-        return v, i, {"skipped_tiles": skipped, "total_tiles": total}
+        return v, i, {"skipped_tiles": jnp.sum(skips),
+                      "total_tiles": skips.size,
+                      "skips": skips, "theta": v[:, -1]}
     return v, i
+
+
+def pruned_sweep(partial, st: PruneState, k: int, *, block_n: int,
+                 backend: str, block_b: int = 256, floor=None,
+                 carry=None):
+    """One score-bound pruned sweep over ALL rows of ``st`` (callers
+    slice the state for phased sweeps).  ``floor [B]`` is the per-query
+    candidate floor (None = -inf), ``carry`` an optional (vals, ids)
+    [B, k] running-list seed from a previous phase.  Returns
+    (values [B, k], ids [B, k], skips [n_tiles] int32) — ``skips[t]``
+    is 1 iff tile t issued no work (kernel backend: for every batch
+    block).  ``k`` may exceed the slice's row count (phased sweeps keep
+    the full-width list across phases; unfilled slots stay -inf/0).
+    ``partial`` must already be canonicalised fp32."""
+    B = partial.shape[0]
+    N = st.codes.shape[0]
+    k = int(k)
+    if floor is None:
+        floor = jnp.full((B,), -jnp.inf, jnp.float32)
+    if carry is None:
+        carry = (jnp.full((B, k), -jnp.inf, jnp.float32),
+                 jnp.zeros((B, k), jnp.int32))
+    if backend == "scan":
+        return _jpq_topk_scan_pruned(
+            partial, st.codes, st.ids, st.present, floor, carry[0],
+            carry[1], k=k, block_n=block_n,
+            tie_break_ids=st.tie_break_ids)
+    bb = min(block_b, _ceil_mult(B, 8))
+    Bp, Np = _ceil_mult(B, bb), _ceil_mult(N, block_n)
+    partial_p = jnp.pad(partial, ((0, Bp - B), (0, 0), (0, 0)))
+    codes_p = jnp.pad(st.codes, ((0, Np - N), (0, 0)))
+    ids_p = jnp.pad(st.ids, (0, Np - N))[:, None]
+    floor_p = jnp.pad(floor[:, None], ((0, Bp - B), (0, 0)),
+                      constant_values=jnp.inf)
+    iv_p = jnp.pad(carry[0], ((0, Bp - B), (0, 0)),
+                   constant_values=-jnp.inf)
+    ii_p = jnp.pad(carry[1], ((0, Bp - B), (0, 0)))
+    v, i, skips = jpq_topk_tiles_pruned(
+        partial_p, codes_p, ids_p, st.present, floor_p, iv_p, ii_p,
+        k=k, n_items=N, n_batch=B, block_b=bb, block_n=block_n,
+        tie_break_ids=st.tie_break_ids,
+        interpret=backend == "interpret")
+    # per-tile skip flags: a tile counts skipped when every batch-grid
+    # block skipped it (gb == 1 for B <= block_b, the serving shape)
+    return v[:B], i[:B], jnp.min(skips, axis=0)
 
 
 _SCAN_BLOCK_N = 131072
@@ -202,6 +294,27 @@ def prune_block_n(N: int, target: int = _PRUNE_BLOCK_N) -> int:
     the presence mask saturates, and no tile can ever be skipped — so
     pruned sweeps default to ~8k tiles (still >> merge cost)."""
     return scan_block_n(N, target)
+
+
+def mesh_prune_block_n(N: int, shards: int,
+                       target: int = _PRUNE_BLOCK_N) -> int:
+    """Pruned tile size for a ``shards``-way row-sharded catalogue: the
+    divisor of the per-shard row count closest to ``target``, so one
+    GLOBAL permute-then-shard PruneState tiles every shard's rows
+    exactly (``core.sharded.fused_topk_over_codes`` refuses states
+    whose tiles straddle shard boundaries — rebuilding per request is
+    the O(N·m) bug this replaces)."""
+    assert N % shards == 0, (N, shards)
+    local_n = N // shards
+    best = local_n
+    d = 1
+    while d * d <= local_n:
+        if local_n % d == 0:
+            for c in (d, local_n // d):
+                if abs(c - target) < abs(best - target):
+                    best = c
+        d += 1
+    return best
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n"))
@@ -245,8 +358,9 @@ def _jpq_topk_scan(partial, codes, *, k: int, block_n: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n",
                                              "tie_break_ids"))
-def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
-                          block_n: int, tie_break_ids: bool):
+def _jpq_topk_scan_pruned(partial, codes, ids, present, floor, vals0,
+                          idx0, *, k: int, block_n: int,
+                          tie_break_ids: bool):
     """Score-bound pruned sweep as plain XLA: a lax.scan carrying the
     running (values, ids) top-k, each block step ``cond``-guarded on the
     tile bound beating the running k-th value.
@@ -258,7 +372,10 @@ def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
     cannot contribute an entry (strictly-below threshold, or tied — and
     ties lose to the smaller-id entries already in the list when the
     sweep is ascending; under a permutation the merge tie-breaks on
-    original id, so only strictly-below tiles are skipped)."""
+    original id, so only strictly-below tiles are skipped).  ``floor``
+    [B] is the strict-skip candidate floor (admissible iff ≤ the final
+    k-th value — the caller's contract); ``vals0``/``idx0`` [B, k] seed
+    the running list (phased sweeps).  Returns (v, i, skips [nb])."""
     B, m, b = partial.shape
     N = codes.shape[0]
     Np = _ceil_mult(N, block_n)
@@ -266,12 +383,9 @@ def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
     blocks = jnp.pad(codes, ((0, Np - N), (0, 0))).reshape(nb, block_n, m)
     id_blocks = jnp.pad(ids, (0, Np - N)).reshape(nb, block_n)
     starts = jnp.arange(nb, dtype=jnp.int32) * block_n
-    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
-            jnp.zeros((B, k), jnp.int32),
-            jnp.zeros((), jnp.int32))
 
     def step(carry, xs):
-        vals, idx, nskip = carry
+        vals, idx = carry
         cb, ib, pres, n0 = xs            # [Nt, m], [Nt], [m, b], scalar
         theta = vals[:, -1]
         ub = jnp.zeros((B,), jnp.float32)
@@ -279,8 +393,10 @@ def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
             pj = jnp.where(pres[j][None, :] > 0, partial[:, j, :],
                            -jnp.inf)
             ub = ub + jnp.max(pj, axis=1)
-        need = (jnp.any(ub >= theta) if tie_break_ids
-                else jnp.any(ub > theta))
+        ok = (ub >= theta) if tie_break_ids else (ub > theta)
+        # the floor is strict-skip per ROW before the any-reduce: a row
+        # clearing its own θ but not its floor must not demand the tile
+        need = jnp.any(ok & (ub >= floor))
 
         def do(args):
             vals, idx = args
@@ -299,8 +415,8 @@ def _jpq_topk_scan_pruned(partial, codes, ids, present, *, k: int,
             return v, jnp.take_along_axis(cat_i, p, axis=1)
 
         vals, idx = jax.lax.cond(need, do, lambda a: a, (vals, idx))
-        return (vals, idx, nskip + 1 - need.astype(jnp.int32)), None
+        return (vals, idx), 1 - need.astype(jnp.int32)
 
-    (v, i, nskip), _ = jax.lax.scan(
-        step, init, (blocks, id_blocks, present, starts))
-    return v, i, nskip, jnp.asarray(nb, jnp.int32)
+    (v, i), skips = jax.lax.scan(
+        step, (vals0, idx0), (blocks, id_blocks, present, starts))
+    return v, i, skips

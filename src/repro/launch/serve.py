@@ -1,7 +1,7 @@
 """Serving entrypoint: batched retrieval / scoring replica loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch two-tower-retrieval-jpq \
-        --requests 20 --batch-size 64 --fused
+        --requests 20 --batch-size 64 --fused --prune --perm --warm-theta
 
 Loads the arch's smoke config (or a checkpoint via --ckpt-dir), jits the
 serve program, and drives batched requests through it, reporting
@@ -13,10 +13,20 @@ identical device buffers, not realistic serving, and under-reports
 p50/p99.  ``--seed`` makes the request stream reproducible.  For archs
 with a ``retrieve`` serve path, ``--fused/--no-fused`` switches between
 the PQTopK fused score+top-k path and the materialise-then-top-k
-reference (docs/serving.md).
+reference (docs/serving.md); ``--prune`` adds score-bound dynamic
+pruning (the PruneState is built ONCE, mesh-aware, outside the
+per-request jit), ``--perm`` sweeps in popularity order (tallied from
+the request template's id histogram — the serving stand-in for
+train-set counts), ``--warm-theta [decay]`` seeds each request's
+threshold from a ``ThresholdState`` EMA, and ``--mesh S`` runs the
+whole loop on an S-way model-sharded host mesh (permute-then-shard
+pruned serving).  With pruning on, the loop reports the skip fraction
+aggregated across ALL shards (mean weighted by local tile count, the
+``fused_topk_over_codes`` stats contract) — not shard 0's.
 """
 import argparse
 import inspect
+import os
 import time
 
 import numpy as np
@@ -49,6 +59,20 @@ def make_requests(template, batch_size: int, n_requests: int, seed: int):
         yield req
 
 
+def _template_popularity(template, n_rows: int) -> np.ndarray:
+    """Per-row id counts tallied from every integer field of the
+    request template — the serving-side stand-in for train-set
+    interaction counts when only the request stream is at hand."""
+    counts = np.zeros(n_rows, np.int64)
+    for v in template.values():
+        v = np.asarray(v)
+        if np.issubdtype(v.dtype, np.integer):
+            ids = v.reshape(-1)
+            ids = ids[(ids >= 0) & (ids < n_rows)]
+            np.add.at(counts, ids, 1)
+    return counts
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="two-tower-retrieval-jpq")
@@ -64,12 +88,34 @@ def main():
                     default=False,
                     help="score-bound dynamic pruning of code tiles on "
                          "the fused path (bit-exact; docs/serving.md)")
+    ap.add_argument("--perm", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="popularity-permuted pruned sweep (implies the "
+                         "permute-then-shard layout under --mesh)")
+    ap.add_argument("--warm-theta", nargs="?", const=0.9, default=None,
+                    type=float, metavar="DECAY",
+                    help="EMA warm-start of the pruning threshold "
+                         "(core.serve.ThresholdState; default decay 0.9)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="model-shard the catalogue S ways over host "
+                         "devices (0 = no mesh)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
+    if args.mesh > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
+
+    import contextlib
+
     import jax
     import jax.numpy as jnp
+    from repro import dist
     from repro.configs import get_bundle
+    from repro.core import serve as serve_mod
     from repro.nn import module as nn
 
     bundle = get_bundle(args.arch)
@@ -81,6 +127,16 @@ def main():
         params = nn.with_values(params, values)
         print(f"restored step {step} from {args.ckpt_dir}")
 
+    mesh_ctx = contextlib.nullcontext()
+    if args.mesh > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh_ctx = dist.use_mesh_rules(
+            make_host_mesh(args.mesh, model=args.mesh))
+
+    template = {k: v for k, v in batch.items()
+                if k not in ("label", "labels")}
+    warm_state = None
+    pruned = False
     if hasattr(model, "retrieve"):
         kw = {"top_k": args.top_k}
         sig = inspect.signature(model.retrieve).parameters
@@ -90,42 +146,94 @@ def main():
             # serving protocol (docs/serving.md): the presence mask is
             # codes-only — build the PruneState ONCE here, outside the
             # per-request jit, so the latency loop measures the bound
-            # test and not an O(N·m) rebuild per request
+            # test and not an O(N·m) rebuild per request.  Under a mesh
+            # the block size must tile the per-shard rows so the SAME
+            # global state row-slices every request (permute-then-shard)
             kw["prune"] = True
             emb = getattr(model, "emb", None)
             if emb is not None and emb.cfg.kind == "jpq" \
                     and "item_emb" in params:
+                from repro.core.assign import popularity_permutation
                 from repro.kernels.jpq_topk import ops as _tops
                 codes = params["item_emb"]["codes"].value
-                kw["prune"] = _tops.prepare_pruning(
-                    codes, emb.cfg.b,
-                    _tops.prune_block_n(codes.shape[0]))
-        fn = jax.jit(lambda p, b: model.retrieve(p, b, **kw))
+                N = codes.shape[0]
+                perm = None
+                if args.perm:
+                    perm = popularity_permutation(
+                        _template_popularity(template, N))
+                bn = _tops.mesh_prune_block_n(N, args.mesh) \
+                    if args.mesh > 1 and N % args.mesh == 0 \
+                    else _tops.prune_block_n(N)
+                kw["prune"] = _tops.prepare_pruning(codes, emb.cfg.b, bn,
+                                                    perm=perm)
+                pruned = args.fused
+        if pruned:
+            kw["return_stats"] = True
+        if pruned and args.warm_theta is not None:
+            warm_state = serve_mod.ThresholdState(args.warm_theta)
+            fn = jax.jit(lambda p, b, w: model.retrieve(p, b, warm=w,
+                                                        **kw))
+        else:
+            fn = jax.jit(lambda p, b: model.retrieve(p, b, **kw))
     else:
         fn = jax.jit(model.serve)
 
-    template = {k: v for k, v in batch.items()
-                if k not in ("label", "labels")}
+    def dispatch(req):
+        req = {k: jnp.asarray(v) for k, v in req.items()}
+        if warm_state is not None:
+            out = fn(params, req, jnp.asarray(
+                warm_state.floor(args.batch_size)))
+        else:
+            out = fn(params, req)
+        jax.block_until_ready(out)
+        return out
+
+    def account(out):
+        # OUTSIDE the timed window: device->host stats readback + EMA
+        # update are instrumentation, not serve latency
+        if not pruned:
+            return
+        nonlocal skipped, total
+        *_, stats = out
+        if warm_state is not None:
+            warm_state.update(np.asarray(stats["theta"]))
+        skipped += float(stats["skipped_tiles"])
+        total += float(stats["total_tiles"])
+
     reqs = make_requests(template, args.batch_size, args.requests + 1,
                          args.seed)
-    warmup = {k: jnp.asarray(v) for k, v in next(reqs).items()}
-    jax.block_until_ready(fn(params, warmup))      # compile
-    lats = []
-    for req in reqs:
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(params,
-                                 {k: jnp.asarray(v) for k, v in
-                                  req.items()}))
-        lats.append((time.perf_counter() - t0) * 1e3)
+    lats, skipped, total = [], 0.0, 0.0
+    with mesh_ctx:
+        account(dispatch(next(reqs)))              # compile
+        for req in reqs:
+            t0 = time.perf_counter()
+            out = dispatch(req)
+            lats.append((time.perf_counter() - t0) * 1e3)
+            account(out)
     lats = np.asarray(lats)
     mode = ("fused" if args.fused else "materialise") \
         if hasattr(model, "retrieve") else "serve"
-    if mode == "fused" and args.prune:
+    # label what actually ran: `pruned` is only set when the arch's
+    # embedding is JPQ and the fused path took the PruneState — argv
+    # alone would claim pruning for archs that fell through to the
+    # reference path
+    if pruned:
         mode = "fused+prune"
+        if args.perm:
+            mode += "+perm"
+        if warm_state is not None:
+            mode += "+warm"
+    extra = ""
+    if pruned and total > 0:
+        # aggregated across ALL shards by fused_topk_over_codes' stats
+        # (mean weighted by local tile count), then across requests
+        extra = f" skip={skipped / total:.3f}"
+    if args.mesh > 1:
+        extra += f" mesh={args.mesh}"
     print(f"{args.arch}: batch={args.batch_size} n={args.requests} "
           f"path={mode} seed={args.seed} "
           f"p50={np.percentile(lats, 50):.2f}ms "
-          f"p99={np.percentile(lats, 99):.2f}ms")
+          f"p99={np.percentile(lats, 99):.2f}ms{extra}")
 
 
 if __name__ == "__main__":

@@ -114,7 +114,8 @@ class TwoTower:
         return loss, {"loss": loss, "in_batch_acc": acc}
 
     def retrieve(self, p, batch, *, top_k: int = 100, fused: bool = True,
-                 prune=None, perm=None):
+                 prune=None, perm=None, warm=None,
+                 return_stats: bool = False):
         """Score user(s) against the full catalogue; returns top-k.
         With kind="jpq" the catalogue read is m bytes/item (codes) not
         4d — and the default fused path (core.serve.retrieve_topk)
@@ -122,11 +123,14 @@ class TwoTower:
         matrix is never materialised.  fused=False keeps the
         materialise-then-hierarchical-top-k reference path; ``prune``
         additionally skips code tiles whose score bound cannot reach
-        the running top-k (bit-exact, docs/serving.md)."""
+        the running top-k (bit-exact, docs/serving.md), ``warm`` seeds
+        the threshold from a ``serve.ThresholdState`` EMA, and
+        ``return_stats`` appends the pruning-stats dict."""
         from repro.core import serve
         u = self.user_vec(p, batch["user_hist"])           # [B, d]
         return serve.retrieve_topk(self.emb, p["item_emb"], u, k=top_k,
-                                   fused=fused, prune=prune, perm=perm)
+                                   fused=fused, prune=prune, perm=perm,
+                                   warm=warm, return_stats=return_stats)
 
     def bulk_retrieve(self, p, batch, *, top_k: int = 100,
                       chunk: int = 2048):

@@ -202,7 +202,8 @@ class SeqRecModel:
         return self._mask_special(self.emb.logits(p["item_emb"], h[:, -1]))
 
     def retrieve_topk(self, p, seq, *, k: int, fused: bool = True,
-                      prune=None, perm=None, block_n=None, backend=None):
+                      prune=None, perm=None, warm=None, block_n=None,
+                      backend=None, return_stats: bool = False):
         """Top-k catalogue retrieval from the last position WITHOUT
         materialising the [B, n_rows] score matrix ``score_last``
         builds: JPQ heads route through the fused PQTopK path
@@ -210,17 +211,25 @@ class SeqRecModel:
         full/QR heads fall back to materialise + hierarchical top-k.
         Bit-equal to ``lax.top_k(score_last(p, seq), k)`` — pad and
         [MASK] rows are demoted to the same NEG_INF, and the candidate
-        re-rank tie-breaks on item id like a stable top-k."""
+        re-rank tie-breaks on item id like a stable top-k.  ``warm`` /
+        ``return_stats`` follow serve.retrieve_topk; note the stats'
+        ``theta`` is the INTERNAL (k+2)-candidate threshold — exactly
+        what a ThresholdState should EMA for this entrypoint."""
         from repro.core import serve
         n_rows = self.cfg.n_rows
         k_out = min(int(k), n_rows)
         h = self.encode(p, self._serve_seq(seq))
         # two extra candidates cover the pad + [MASK] rows that the
         # materialised path masks before its top-k
-        v, i = serve.retrieve_topk(
+        out = serve.retrieve_topk(
             self.emb, p["item_emb"], h[:, -1], k=min(k_out + 2, n_rows),
-            fused=fused, prune=prune, perm=perm, block_n=block_n,
-            backend=backend)
+            fused=fused, prune=prune, perm=perm, warm=warm,
+            block_n=block_n, backend=backend, return_stats=return_stats)
+        stats = None
+        if return_stats:
+            v, i, stats = out
+        else:
+            v, i = out
         forbidden = (i == 0) | (i == n_rows - 1)
         v = jnp.where(forbidden, NEG_INF, v)
         # stable (value desc, id asc) re-rank; the bit-level key
@@ -228,6 +237,8 @@ class SeqRecModel:
         # equals a top_k over the masked materialised scores
         from repro.kernels.jpq_topk.jpq_topk import desc_sort_key
         _, ids, vv = jax.lax.sort((desc_sort_key(v), i, v), num_keys=2)
+        if return_stats:
+            return vv[..., :k_out], ids[..., :k_out], stats
         return vv[..., :k_out], ids[..., :k_out]
 
 

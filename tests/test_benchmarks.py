@@ -78,3 +78,31 @@ class TestBenchmarkSmoke:
         assert rows
         for r in rows:
             assert "exact_match=True" in r["derived"], r
+
+    def test_jpq_topk_mesh_rows(self):
+        """The mesh-native pruned rows: permute-then-shard skip
+        fraction aggregated across shards, and the warm-started sweep
+        skipping inside the first (pre-exchange) window — both exact
+        (covered by test_jpq_topk_rows_exact) and well-formed."""
+        m = re.search(r"host_platform_device_count=(\d+)",
+                      os.environ.get("XLA_FLAGS", ""))
+        if m and int(m.group(1)) < 8:
+            import pytest
+            pytest.skip("bench skips mesh rows below 8 host devices "
+                        "(caller-preset XLA_FLAGS)")
+        mesh = {r["name"]: r["derived"] for r in self.rows
+                if "/mesh8_" in r["name"]}
+        pruned = [d for n, d in mesh.items() if n.endswith("mesh8_pruned")]
+        warm = [d for n, d in mesh.items() if n.endswith("mesh8_warm")]
+        assert pruned and warm, mesh
+        for d in pruned:
+            frac = float(re.search(r"skipped_tile_frac=([0-9.]+)",
+                                   d).group(1))
+            assert 0.0 <= frac <= 1.0, d
+            assert re.search(r"delta_vs_unsharded=[+-][0-9.]+", d), d
+        for d in warm:
+            m = re.search(r"first_window_skips=(\d+)/(\d+)", d)
+            assert m, d
+            # warm start must prune inside the first window while the
+            # running threshold is still cold
+            assert int(m.group(1)) > 0, d

@@ -222,24 +222,23 @@ class TestPrunedPropertySweep:
         """Quantised LUTs (scale rounds to few distinct levels) make
         bounds adversarially tight; random permutations break every
         sweep-order assumption a buggy merge could hide behind.
-        -0.0 entries are canonicalised away: the kernel's one-hot MXU
-        contraction sums them to +0.0 while the gather reference keeps
-        the sign, and lax.top_k's IEEE total order distinguishes ±0.0
-        — a (documented) domain caveat of the fused formulation, not a
-        pruning property."""
+        jnp.round produces -0.0 entries (round(-0.3) == -0.0), which
+        the entrypoints canonicalise to +0.0 — so the oracle is the
+        materialise reference over the canonicalised LUT (numerically
+        the same scores; only the ±0.0 tie order was ever at stake)."""
         B, k = Bk
         key = jax.random.PRNGKey(N * 31 + m * 7 + B + k)
         partial = jnp.round(
             jax.random.normal(jax.random.fold_in(key, 1), (B, m, b))
             * scale)
-        partial = jnp.where(partial == 0.0, 0.0, partial)
         codes = jax.random.randint(jax.random.fold_in(key, 2), (N, m),
                                    0, b, jnp.int32)
         perm = None
         if use_perm:
             perm = jnp.asarray(np.random.default_rng(N + k)
                                .permutation(N), jnp.int32)
-        rv, ri = jpq_topk_lut_ref(partial, codes, k)
+        rv, ri = jpq_topk_lut_ref(
+            jnp.where(partial == 0.0, 0.0, partial), codes, k)
         for backend in BACKENDS:
             v, i = jpq_topk_lut(partial, codes, k, block_n=bn,
                                 backend=backend, prune=True, perm=perm)

@@ -107,6 +107,56 @@ class TestFusedMatchesReference:
         np.testing.assert_array_equal(np.asarray(i8), np.asarray(i))
 
 
+class TestSignedZero:
+    """The entrypoints canonicalise -0.0 -> +0.0 in the LUT (the one-hot
+    MXU dot flattens the sign of zero while a gather keeps it, and
+    lax.top_k's IEEE total order splits ±0.0 ties) — so every backend
+    agrees bit-for-bit with the materialise reference over the
+    canonicalised LUT, the former domain caveat.  Regression for the
+    PR 3 caveat removal."""
+
+    def _case(self, seed=17, B=3, m=2, b=8, N=300):
+        key = jax.random.PRNGKey(seed)
+        # integer levels in {-1, 0, 1}; EVERY zero planted as -0.0
+        partial = jax.random.randint(jax.random.fold_in(key, 1),
+                                     (B, m, b), -1, 2).astype(jnp.float32)
+        partial = jnp.where(partial == 0.0, -0.0, partial)
+        assert bool(jnp.any(jnp.signbit(partial) & (partial == 0.0)))
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (N, m),
+                                   0, b, jnp.int32)
+        canon = jnp.where(partial == 0.0, 0.0, partial)
+        return partial, canon, codes
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_matches_canonical_reference_bitwise(self, backend):
+        partial, canon, codes = self._case()
+        rv, ri = jpq_topk_lut_ref(canon, codes, 40)
+        v, i = jpq_topk_lut(partial, codes, 40, block_n=64,
+                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        # no -0.0 ever escapes the fused path
+        v = np.asarray(v)
+        assert not np.any(np.signbit(v) & (v == 0.0))
+        # and values agree NUMERICALLY with the raw-LUT reference too
+        # (canonicalisation changes no score: -0.0 == +0.0)
+        rv_raw, _ = jpq_topk_lut_ref(partial, codes, 40)
+        assert np.array_equal(v, np.asarray(rv_raw))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_pruned_and_permuted(self, backend):
+        partial, canon, codes = self._case(seed=23)
+        rv, ri = jpq_topk_lut_ref(canon, codes, 25)
+        N = codes.shape[0]
+        perm = jnp.asarray(np.random.default_rng(2).permutation(N),
+                           jnp.int32)
+        for pm in (None, perm):
+            v, i = jpq_topk_lut(partial, codes, 25, block_n=64,
+                                backend=backend, prune=True, perm=pm)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
 class TestPropertySweep:
     @given(st.integers(1, 400), st.sampled_from([1, 2, 4, 8]),
            st.sampled_from([2, 16, 64]),
