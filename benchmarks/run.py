@@ -10,6 +10,10 @@ serving hot-path microbench and the dry-run roofline reader.
                       vs Pallas kernel (interpret), us/call + bytes moved
   jpq_topk          : PQTopK fused score+top-k vs materialise-then-top-k
                       at N ∈ {100k, 1M} (full mode), time + peak bytes
+  serve_latency     : request-level continuous-batching server under
+                      open-loop Poisson load — end-to-end p50/p99 per
+                      request (queueing included) for sync-loop vs
+                      micro-batched vs warm-merged replica configs
   kernels           : Pallas kernel suite (jpq_scores / jpq_lookup /
                       embedding_bag) in interpret mode vs refs — CPU
                       wall + max|Δ| parity column (TPU tiles are the
@@ -355,6 +359,78 @@ def jpq_topk_bench(fast: bool = True):
              f"exact_match={w_exact}")
 
 
+# ------------------------------------------- request-level serving
+
+def serve_latency(fast: bool = True):
+    """End-to-end REQUEST latency under open-loop Poisson load through
+    the continuous-batching server (repro.serve) — the number the
+    batch-latency loop (launch/serve.py) cannot see, because it
+    includes the time a request spends waiting to be coalesced.
+
+    Three configs over the same arrival stream: ``sync-loop``
+    (max_batch=1 — every request dispatched alone, no queueing but no
+    batching), ``queue`` (micro-batched under the latency budget), and
+    ``queue+warm-merged`` (two replicas with periodically merged warm
+    threshold floors).  Real wall clock; compilation is warmed out of
+    the measured window.  All three are bit-identical per request by
+    the conformance contract (tests/test_server.py), so the derived
+    column is purely a latency/occupancy story."""
+    from repro.configs import get_bundle
+    from repro.core.serve import ThresholdState
+    from repro.serve import (CatalogueRegistry, Replica, ReplicaPool,
+                             Request, RetrievalServer, ServerMetrics,
+                             poisson_arrivals, request_stream,
+                             run_open_loop)
+    from repro.serve.queue import Batch
+
+    n_req, rate = (24, 400.0) if _SMOKE else \
+        ((120, 600.0) if fast else (600, 1000.0))
+    model, _, rng = get_bundle("two-tower-retrieval-jpq").make_smoke()
+    params = model.init_params(rng)
+    codes = params["item_emb"]["codes"].value
+    hist_len = int(model.cfg.hist_len)
+    buckets = tuple(sorted({max(1, hist_len // 2), hist_len}))
+    hists = request_stream(n_req, n_items=int(model.cfg.n_items),
+                           max_len=hist_len, seed=0)
+    arrivals = poisson_arrivals(rate, n_req, seed=0)
+
+    configs = [
+        ("sync-loop", dict(max_batch=1, replicas=1, warm=False)),
+        ("queue", dict(max_batch=8, replicas=1, warm=False)),
+        ("queue+warm-merged", dict(max_batch=8, replicas=2, warm=True)),
+    ]
+    for name, c in configs:
+        registry = CatalogueRegistry()
+        registry.publish(codes, int(model.emb.cfg.b))
+        pool = ReplicaPool(
+            [Replica(model, params, k=10,
+                     warm=ThresholdState(0.9) if c["warm"] else None,
+                     name=f"r{i}") for i in range(c["replicas"])],
+            merge_every=2 if c["warm"] else 0)
+        live = registry.live()
+        for rep in pool.replicas:          # compile outside the window
+            for L in buckets:
+                rep.serve(Batch([Request(-1, np.ones(L, np.int32))], L,
+                                c["max_batch"]), live)
+        pool.reset_warm()
+        server = RetrievalServer(pool, registry,
+                                 max_batch=c["max_batch"],
+                                 max_delay=0.005, buckets=buckets,
+                                 metrics=ServerMetrics(name))
+        run_open_loop(server, hists, arrivals)
+        server.drain()
+        snap = server.metrics.snapshot()
+        assert snap["requests_completed"] == n_req, snap
+        lat, q = snap["latency_ms"], snap["queue_depth"]
+        warm = snap["warm_hit_rate"]
+        _row(f"serve_latency/{name}", f"{lat['mean'] * 1e3:.0f}",
+             f"p50_ms={lat['p50']:.2f};p99_ms={lat['p99']:.2f};"
+             f"qdepth_mean={q['mean']:.1f};"
+             f"occupancy={snap['batch_occupancy']:.2f};"
+             f"warm_hit_rate="
+             f"{'n/a' if warm is None else f'{warm:.2f}'}")
+
+
 # ---------------------------------------------- Pallas kernel suite
 
 def kernels_bench(fast: bool = True):
@@ -472,6 +548,7 @@ BENCHES = {
     "fig4": fig4_tradeoff,
     "jpq_scoring": jpq_scoring,
     "jpq_topk": jpq_topk_bench,
+    "serve_latency": serve_latency,
     "kernels": kernels_bench,
     "grad_exchange": grad_exchange,
     "roofline": roofline,

@@ -56,6 +56,18 @@ class ThresholdState:
     a demotion re-sweep).  Host-side numpy, like every other serving
     artefact; keep it outside jit and feed ``floor`` in as a traced
     argument so EMA updates never retrigger compilation.
+
+    Pathological inputs are dropped, not folded: a NaN theta (an
+    all-padding batch scored nothing real) or a ±inf (an empty running
+    list) must never poison the floor — ``update`` filters to the
+    finite entries and is a no-op when none remain.  ``reset()``
+    returns to the cold (−inf floor) state — call it on catalogue
+    hot-swap, where old thresholds describe a catalogue that no longer
+    exists.  ``merge`` makes per-replica states shareable: the EMAs are
+    host-side floats, so a periodic cross-replica merge is a pure
+    Python min-reduce (commutative/associative; min is the
+    conservative direction — an undershot floor loses a little pruning,
+    never exactness).
     """
 
     def __init__(self, decay: float = 0.9):
@@ -72,11 +84,33 @@ class ThresholdState:
         return np.full((batch_size,), fill, np.float32)
 
     def update(self, thetas) -> None:
-        t = float(np.min(np.asarray(thetas)))
-        if not np.isfinite(t):
+        t = np.asarray(thetas, np.float64).reshape(-1)
+        t = t[np.isfinite(t)]
+        if t.size == 0:
             return
+        t = float(t.min())
         self.theta = t if self.theta is None else \
             self.decay * self.theta + (1.0 - self.decay) * t
+
+    def reset(self) -> None:
+        """Back to the cold state (floor −inf; decay kept)."""
+        self.theta = None
+
+    @classmethod
+    def merge(cls, states, adopt: bool = True):
+        """Conservative cross-replica merge: the MIN of the replicas'
+        EMAs (None entries — cold replicas — are skipped).  With
+        ``adopt`` every state takes the merged value, so all replicas
+        leave the merge with the same floor.  Returns the merged theta
+        (None when every replica is cold).  Min is commutative and
+        associative, so merge order — and which replica drives the
+        reduce — cannot matter."""
+        thetas = [s.theta for s in states if s.theta is not None]
+        merged = min(thetas) if thetas else None
+        if adopt and merged is not None:
+            for s in states:
+                s.theta = merged
+        return merged
 
 
 def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,

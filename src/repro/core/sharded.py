@@ -157,7 +157,10 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
       results stay bit-exact unconditionally.
 
     ``return_stats=True`` appends {"skipped_tiles", "total_tiles",
-    "skips", "theta", "exchange_tiles"}: tile counts are aggregated
+    "skips", "theta", "exchange_tiles", "demoted"} (``demoted`` [B]
+    bool — the warm floor overshot that query and it was re-swept; the
+    per-request warm-hit signal serving metrics count): tile counts are
+    aggregated
     across model shards and averaged over data shards (mean weighted
     by local tile count — every shard sweeps the same tile count).
     """
@@ -287,11 +290,13 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
 
     if warm is None:
         out = run(floor0)
+        demoted = jnp.zeros((B,), bool)
     else:
         out1 = run(floor0)
         # warm demotion: the merged k-th value certifies the floor
         # (list values are real scores ≤ the true global k-th)
         ok = out1[0][:, -1] >= floor0
+        demoted = ~ok
         out = jax.lax.cond(
             jnp.all(ok), lambda o: o,
             lambda o: run(jnp.where(ok, floor0, -jnp.inf)), out1)
@@ -300,5 +305,6 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
     vm, im, sk, skv = out
     stats = {"skipped_tiles": sk, "total_tiles": nt_loc * shards,
              "skips": skv, "theta": vm[:, -1],
-             "exchange_tiles": 0 if t_ex is None else t_ex}
+             "exchange_tiles": 0 if t_ex is None else t_ex,
+             "demoted": demoted}
     return vm, im, stats

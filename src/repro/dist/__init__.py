@@ -61,6 +61,14 @@ def constrain(x, axes):
     mesh = _CTX.mesh
     if mesh is None:
         return x
+    # inside a shard_map body the mesh axes are manual and
+    # with_sharding_constraint refuses specs that name them (the
+    # compressed-gradient dp step traces model losses there); the
+    # enclosing shard_map's specs already pin the layout, so the
+    # advisory constraint simply stands down
+    manual = _compat.manual_axis_names()
+    if manual and any(a in manual for a in mesh.shape):
+        return x
     spec = resolve_axes(axes, x.shape, mesh, _CTX.rules)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, spec))

@@ -20,6 +20,24 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
                       out_specs=out_specs, **{_CHECK_KW: check_vma})
 
 
+def manual_axis_names():
+    """Mesh axes currently bound manually (i.e. we are tracing inside a
+    ``shard_map`` body).  ``with_sharding_constraint`` rejects specs
+    naming a manual axis, so ``dist.constrain`` must stand down there —
+    the enclosing shard_map's in/out specs already pin the layout."""
+    try:                                             # jax <= 0.4.x
+        from jax._src.core import get_axis_env
+        return tuple(get_axis_env().axis_names())
+    except Exception:
+        pass
+    try:                                             # jax >= 0.5
+        from jax._src.mesh import get_abstract_mesh
+        m = get_abstract_mesh()
+        return tuple(m.manual_axes) if m is not None else ()
+    except Exception:                                # pragma: no cover
+        return ()
+
+
 def install_cost_analysis_shim():
     """``Compiled.cost_analysis()`` returned a per-program *list* of
     dicts before jax 0.5 and a single dict after.  Normalise the

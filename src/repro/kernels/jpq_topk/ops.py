@@ -170,7 +170,10 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
     demotion contract.  ``return_stats=True`` appends a dict with
     ``skipped_tiles`` / ``total_tiles`` / ``skips`` (per-tile skip
     vector) / ``theta`` (final per-query k-th value — the quantity a
-    ``ThresholdState`` EMAs); jnp values, pruned paths only.
+    ``ThresholdState`` EMAs) / ``demoted`` ([B] bool: the warm floor
+    overshot that query and the sweep re-ran — the per-request
+    warm-hit signal serving metrics count); jnp values, pruned paths
+    only.
     """
     if backend is None:
         backend = "pallas" if _on_tpu() else "scan"
@@ -214,12 +217,14 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
 
     if floor is None:
         v, i, skips = sweep(None)
+        demoted = jnp.zeros((B,), bool)
     else:
         # demotion rule: a floor is only admissible when ≤ the true
         # k-th value; v1[:, -1] ≥ floor certifies exactly that (list
         # values are real scores, so v1[:, -1] ≤ the true k-th).
         v1, i1, s1 = sweep(floor)
         ok = v1[:, -1] >= floor
+        demoted = ~ok
         v, i, skips = jax.lax.cond(
             jnp.all(ok), lambda c: c,
             lambda c: sweep(jnp.where(ok, floor, -jnp.inf)),
@@ -227,7 +232,8 @@ def jpq_topk_lut(partial, codes, k: int, *, block_b: int = 256,
     if return_stats:
         return v, i, {"skipped_tiles": jnp.sum(skips),
                       "total_tiles": skips.size,
-                      "skips": skips, "theta": v[:, -1]}
+                      "skips": skips, "theta": v[:, -1],
+                      "demoted": demoted}
     return v, i
 
 

@@ -32,30 +32,44 @@ import time
 import numpy as np
 
 
-def make_requests(template, batch_size: int, n_requests: int, seed: int):
+def make_requests(template, batch_size: int, n_requests: int, seed: int,
+                  reserved=()):
     """Per-iteration request batches from a template batch.
 
     Integer fields (ids) are re-drawn uniformly over the template's
     observed [min, max] value range with the template's dtype and
     trailing shape — so every iteration dispatches a fresh id pattern
-    against the same compiled program shape.  Float fields are tiled
-    from the template (dense features; their values don't gate any
-    trace).  Deterministic in ``seed``; yields ``n_requests`` dicts of
-    numpy arrays with leading dim ``batch_size``.
+    against the same compiled program shape.  ``reserved`` ids (pad
+    row 0, [MASK] for sequential heads) are excluded from the draw: a
+    uniform draw that can emit the pad id asks the model about rows no
+    real request contains, and a [MASK] hit corrupts the query-position
+    protocol.  Float fields are row-SAMPLED from the template (the old
+    tile path concatenated copies and truncated, so batch sizes that
+    don't divide the template saw the same leading rows every
+    iteration and never the tail).  Deterministic in ``seed``; yields
+    ``n_requests`` dicts of numpy arrays with leading dim
+    ``batch_size``.
     """
     rng = np.random.default_rng(seed)
     tmpl = {k: np.asarray(v) for k, v in template.items()}
+    reserved = np.asarray(sorted({int(r) for r in reserved}), np.int64)
     for _ in range(n_requests):
         req = {}
         for name, v in tmpl.items():
             shape = (batch_size,) + v.shape[1:]
             if np.issubdtype(v.dtype, np.integer):
                 lo, hi = int(v.min()), int(v.max())
-                req[name] = rng.integers(lo, hi, shape, dtype=v.dtype,
-                                         endpoint=True)
+                valid = np.arange(lo, hi + 1, dtype=np.int64)
+                if reserved.size:
+                    kept = np.setdiff1d(valid, reserved)
+                    # keep the template's range if reserving would
+                    # empty it (degenerate single-id fields)
+                    valid = kept if kept.size else valid
+                req[name] = valid[
+                    rng.integers(0, valid.size, shape)].astype(v.dtype)
             else:
-                reps = max(-(-batch_size // v.shape[0]), 1)
-                req[name] = np.concatenate([v] * reps, 0)[:batch_size]
+                rows = rng.integers(0, v.shape[0], batch_size)
+                req[name] = v[rows]
         yield req
 
 
@@ -200,8 +214,17 @@ def main():
         skipped += float(stats["skipped_tiles"])
         total += float(stats["total_tiles"])
 
+    # retrieval archs speak 1-based item ids: row 0 is padding, and
+    # sequential heads reserve the [MASK] row — neither belongs in a
+    # synthetic request stream
+    reserved = ()
+    if hasattr(model, "retrieve") or hasattr(model, "retrieve_topk"):
+        reserved = (0,)
+        cfg = getattr(model, "cfg", None)
+        if cfg is not None and hasattr(cfg, "mask_id"):
+            reserved = (0, int(cfg.mask_id))
     reqs = make_requests(template, args.batch_size, args.requests + 1,
-                         args.seed)
+                         args.seed, reserved=reserved)
     lats, skipped, total = [], 0.0, 0.0
     with mesh_ctx:
         account(dispatch(next(reqs)))              # compile

@@ -1,0 +1,196 @@
+"""Request-level retrieval server entrypoint (continuous batching).
+
+    PYTHONPATH=src python -m repro.launch.server \
+        --arch two-tower-retrieval-jpq --requests 200 --rate 500 \
+        --max-batch 8 --max-delay-ms 5 --warm --json
+
+Where ``repro.launch.serve`` drives pre-batched requests through one
+jitted program (the batch-latency loop), this entrypoint serves
+SINGLE-USER requests arriving as an open-loop Poisson stream: the
+micro-batching queue coalesces them into fixed-shape ``[max_batch,
+L_bucket]`` batches under the ``--max-delay-ms`` budget, a replica
+pool serves them against the registry's live (validated, hot-swappable)
+catalogue version, and the metrics snapshot reports the end-to-end
+request latency percentiles — queueing included, which is the number a
+batch-latency loop cannot see.
+
+``--smoke`` is the CI contract: after the run it asserts p99 under
+``--p99-budget-ms``, zero dropped/duplicated requests, and a
+schema-valid metrics snapshot, exiting non-zero on any violation.
+Compilation is hoisted out of the measured window by warming every
+(bucket, replica) program on dummy batches first.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="two-tower-retrieval-jpq")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="Poisson arrival rate, requests/second")
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated history-length buckets "
+                         "(default: hist_len/2, hist_len)")
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--prune", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve with the prebuilt score-bound PruneState")
+    ap.add_argument("--warm", nargs="?", const=0.9, default=None,
+                    type=float, metavar="DECAY",
+                    help="per-replica EMA warm threshold floors "
+                         "(default decay 0.9)")
+    ap.add_argument("--merge-every", type=int, default=4,
+                    help="merge replica warm floors every N batches "
+                         "(0 = never)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="model-shard the catalogue S ways (0 = none)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="print the full metrics snapshot as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: assert the serving contract and "
+                         "exit non-zero on violation")
+    ap.add_argument("--p99-budget-ms", type=float, default=2000.0)
+    args = ap.parse_args()
+
+    if args.mesh > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
+
+    import contextlib
+
+    import numpy as np
+
+    from repro import dist
+    from repro.configs import get_bundle
+    from repro.core.serve import ThresholdState
+    from repro.serve import (CatalogueRegistry, MicroBatchQueue,  # noqa: F401
+                             Replica, ReplicaPool, Request,
+                             RetrievalServer, ServerMetrics,
+                             poisson_arrivals, request_stream,
+                             run_open_loop, validate_snapshot)
+    from repro.serve.queue import Batch
+
+    bundle = get_bundle(args.arch)
+    model, batch, rng = bundle.make_smoke()
+    params = model.init_params(rng)
+    emb = getattr(model, "emb", None)
+    if emb is None or emb.cfg.kind != "jpq" or "item_emb" not in params:
+        sys.exit(f"{args.arch}: request-level serving needs a JPQ "
+                 f"item embedding")
+    codes = params["item_emb"]["codes"].value
+    n_items = int(model.cfg.n_items)
+    hist_len = int(getattr(model.cfg, "hist_len",
+                           getattr(model.cfg, "max_len", 16)))
+    reserved = (0,)
+    if hasattr(model.cfg, "mask_id"):
+        reserved = (0, int(model.cfg.mask_id))
+
+    mesh_ctx = contextlib.nullcontext()
+    if args.mesh > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh_ctx = dist.use_mesh_rules(
+            make_host_mesh(args.mesh, model=args.mesh))
+
+    if args.buckets:
+        buckets = tuple(int(x) for x in args.buckets.split(","))
+    else:
+        buckets = tuple(sorted({max(1, hist_len // 2), hist_len}))
+
+    with mesh_ctx:
+        registry = CatalogueRegistry(shards=args.mesh,
+                                     prune=args.prune)
+        registry.publish(codes, int(emb.cfg.b))
+
+        pool = ReplicaPool(
+            [Replica(model, params, k=args.top_k,
+                     warm=(ThresholdState(args.warm)
+                           if args.warm is not None and args.prune
+                           else None),
+                     name=f"replica{i}")
+             for i in range(args.replicas)],
+            merge_every=args.merge_every)
+
+        # warm every (bucket, replica) program before the timed run —
+        # compile time is not serve latency
+        live = registry.live()
+        for rep in pool.replicas:
+            for L in buckets:
+                dummy = Batch([Request(-1, np.ones(L, np.int32))], L,
+                              args.max_batch)
+                rep.serve(dummy, live)
+        pool.reset_warm()
+
+        metrics = ServerMetrics(config=_config_name(args))
+        server = RetrievalServer(
+            pool, registry, max_batch=args.max_batch,
+            max_delay=args.max_delay_ms / 1e3, buckets=buckets,
+            metrics=metrics)
+
+        hists = request_stream(args.requests, n_items=n_items,
+                               max_len=hist_len, reserved=reserved,
+                               seed=args.seed)
+        arrivals = poisson_arrivals(args.rate, args.requests,
+                                    seed=args.seed)
+        t0 = time.perf_counter()
+        run_open_loop(server, hists, arrivals)
+        server.drain()
+        wall = time.perf_counter() - t0
+
+    snap = server.metrics.snapshot()
+    errs = validate_snapshot(snap)
+    if args.json:
+        print(json.dumps(snap, indent=1, sort_keys=True))
+    else:
+        lat = snap["latency_ms"]
+        print(f"{args.arch}: {snap['config']} n={args.requests} "
+              f"rate={args.rate:.0f}/s wall={wall:.2f}s "
+              f"p50={lat['p50']:.2f}ms p99={lat['p99']:.2f}ms "
+              f"occ={snap['batch_occupancy']:.2f} "
+              f"qdepth={snap['queue_depth']['mean']:.1f}")
+
+    if args.smoke:
+        problems = list(errs)
+        if snap["latency_ms"]["p99"] >= args.p99_budget_ms:
+            problems.append(
+                f"p99 {snap['latency_ms']['p99']:.1f}ms >= budget "
+                f"{args.p99_budget_ms}ms")
+        if snap["requests_completed"] != snap["requests_submitted"]:
+            problems.append(
+                f"completed {snap['requests_completed']} != submitted "
+                f"{snap['requests_submitted']}")
+        if snap["requests_dropped"] != 0:
+            problems.append(f"dropped {snap['requests_dropped']}")
+        if snap["requests_duplicated"] != 0:
+            problems.append(f"duplicated {snap['requests_duplicated']}")
+        if problems:
+            sys.exit("server-smoke FAILED: " + "; ".join(problems))
+        print("server-smoke OK")
+
+
+def _config_name(args) -> str:
+    name = "queue" if args.max_batch > 1 else "sync-loop"
+    if args.prune:
+        name += "+prune"
+    if args.warm is not None and args.prune:
+        name += "+warm"
+        if args.replicas > 1 and args.merge_every:
+            name += "-merged"
+    if args.mesh > 1:
+        name += f"+mesh{args.mesh}"
+    return name
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Request-level continuous-batching retrieval serving.
+
+The batch serve path (``core.serve.retrieve_topk``) answers "score
+this [B, L] batch"; this package answers "single-user requests arrive
+one at a time — batch them yourself": an async micro-batching queue
+with bucketed fixed-shape padding (``queue``), data-parallel replicas
+with shareable warm-threshold EMAs (``replica``), a catalogue registry
+with validated versioned hot-swap of prebuilt pruning state
+(``registry``), JSON observability (``metrics``), and an open-loop
+Poisson load generator (``loadgen``).  ``server.RetrievalServer``
+composes them; ``repro.launch.server`` is the CLI.
+
+Everything is bit-exact per request against single-request serving
+through the same compiled shape — docs/serving.md §"Request-level
+serving" for the argument, ``tests/test_server.py`` for the proof.
+"""
+from repro.serve.loadgen import (VirtualClock, poisson_arrivals,
+                                 request_stream, run_open_loop)
+from repro.serve.metrics import (METRICS_SCHEMA, ServerMetrics,
+                                 validate_snapshot)
+from repro.serve.queue import PAD_ID, Batch, MicroBatchQueue, Request
+from repro.serve.registry import (CatalogueRegistry, CatalogueVersion,
+                                  codes_hash)
+from repro.serve.replica import Replica, ReplicaPool, Result
+from repro.serve.server import RetrievalServer
+
+__all__ = [
+    "PAD_ID", "Batch", "MicroBatchQueue", "Request",
+    "CatalogueRegistry", "CatalogueVersion", "codes_hash",
+    "Replica", "ReplicaPool", "Result",
+    "ServerMetrics", "METRICS_SCHEMA", "validate_snapshot",
+    "VirtualClock", "poisson_arrivals", "request_stream",
+    "run_open_loop",
+    "RetrievalServer",
+]

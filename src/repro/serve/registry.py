@@ -1,0 +1,190 @@
+"""Catalogue registry: prebuilt ``PruneState``s with versioned hot-swap.
+
+The pruned serve path's presence mask is codes-only and O(N·m) to
+build — EXPERIMENTS.md measured a ~40× collective blow-up when it is
+(re)built inline per request.  The registry is where that protocol
+lives at the server level: every catalogue version's ``PruneState`` is
+built ONCE, keyed by ``(codes-hash, shards, block_n, perm-hash)`` so identical
+catalogues (or re-publishes of the same codes) reuse the prebuilt
+state, and the live version is swapped atomically.
+
+**Hot-swap protocol.**  ``publish(codes, b)`` builds the new version's
+state (off-thread with ``block=False`` — the serving loop keeps
+draining on the live version while the O(N·m) scatter runs), then
+*validates* it on a probe batch — the pruned sweep over the new state
+must be bit-identical to the unpruned fused sweep over the same codes
+(the exactness contract; a corrupted presence mask or a stale id-map
+fails here, before any traffic sees it) — and only then swaps the live
+pointer under the lock.  Readers take a snapshot (``live()``) per
+batch and finish on whatever version they started with: in-flight
+requests drain on the old version, new flushes pick up the new one,
+and nothing is ever served mid-swap.
+
+Because pruning is bit-exact, a swap that changes only the pruning
+artefacts (block_n, permutation) provably cannot change any result —
+which is what lets ``tests/test_server.py`` hot-swap mid-stream and
+still demand bit-identical responses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogueVersion:
+    """An immutable published catalogue: what a replica serves from.
+
+    ``state`` is None for unpruned catalogues (the registry still
+    versions the codes so hot-swap semantics are uniform)."""
+    version: int
+    codes: object                     # jnp [N, m]
+    b: int                            # codebook size (LUT width)
+    state: object                     # kernels.jpq_topk.PruneState | None
+    # (codes-hash, shards, block_n, perm-hash): everything the prebuilt
+    # state depends on — perm included, else a re-publish of the same
+    # codes under a new sweep order would reuse the old state
+    key: Tuple[str, int, int, str]
+    perm: object = None               # [N] original-id sweep order | None
+    built_s: float = 0.0
+    validated: bool = False
+
+
+def codes_hash(codes) -> str:
+    a = np.ascontiguousarray(np.asarray(codes))
+    return hashlib.sha1(a.tobytes() + str(a.shape).encode()).hexdigest()
+
+
+class CatalogueRegistry:
+    """Holds the live catalogue version and the prebuilt-state cache.
+
+    ``shards`` > 1 sizes tiles with ``mesh_prune_block_n`` so ONE
+    global permute-then-shard state row-slices cleanly under a mesh
+    (docs/serving.md); ``block_n`` overrides the tile size explicitly.
+    ``prune=False`` publishes versions without pruning state (the
+    plain fused path).
+    """
+
+    def __init__(self, *, shards: int = 0, block_n: Optional[int] = None,
+                 prune: bool = True, probe_batch: int = 4,
+                 probe_k: int = 10, probe_seed: int = 0):
+        self.shards = int(shards)
+        self.block_n = block_n
+        self.prune = bool(prune)
+        self.probe_batch = int(probe_batch)
+        self.probe_k = int(probe_k)
+        self.probe_seed = int(probe_seed)
+        self._lock = threading.Lock()
+        self._live: Optional[CatalogueVersion] = None
+        self._next_version = 1
+        self._states: Dict[Tuple[str, int, int, str], object] = {}
+        self._threads: List[threading.Thread] = []
+        self._errors: List[BaseException] = []
+        self.swap_count = 0
+
+    # ------------------------------------------------------------ read
+    def live(self) -> CatalogueVersion:
+        """Snapshot of the live version — hold it for the whole batch;
+        the registry never mutates a published version."""
+        v = self._live
+        if v is None:
+            raise RuntimeError("no catalogue published yet")
+        return v
+
+    # ----------------------------------------------------------- write
+    def publish(self, codes, b: int, *, perm=None,
+                block: bool = True) -> int:
+        """Build + validate + swap in a new catalogue version; returns
+        its version number.  ``block=False`` runs build/validate on a
+        worker thread (``wait()`` joins); the live version keeps
+        serving until the swap."""
+        with self._lock:
+            version = self._next_version
+            self._next_version += 1
+        if block:
+            self._build_and_swap(version, codes, b, perm)
+        else:
+            t = threading.Thread(
+                target=self._guarded_build, args=(version, codes, b, perm),
+                name=f"catalogue-build-v{version}", daemon=True)
+            self._threads.append(t)
+            t.start()
+        return version
+
+    def wait(self) -> None:
+        """Join outstanding off-thread builds; re-raise their errors."""
+        for t in self._threads:
+            t.join()
+        self._threads.clear()
+        if self._errors:
+            raise self._errors.pop()
+
+    # -------------------------------------------------------- internals
+    def _guarded_build(self, version, codes, b, perm):
+        try:
+            self._build_and_swap(version, codes, b, perm)
+        except BaseException as e:  # noqa: BLE001 — surfaced by wait()
+            self._errors.append(e)
+
+    def _resolve_block_n(self, N: int):
+        from repro.kernels.jpq_topk import ops as _tops
+        if self.block_n:
+            return int(self.block_n)
+        if self.shards > 1 and N % self.shards == 0:
+            return _tops.mesh_prune_block_n(N, self.shards)
+        return _tops.prune_block_n(N)
+
+    def _build_and_swap(self, version, codes, b, perm):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.jpq_topk import ops as _tops
+
+        t0 = time.perf_counter()
+        codes = jnp.asarray(codes)
+        N = codes.shape[0]
+        bn = self._resolve_block_n(N)
+        key = (codes_hash(codes), self.shards, bn,
+               "" if perm is None else codes_hash(perm))
+        state = None
+        if self.prune:
+            with self._lock:
+                state = self._states.get(key)
+            if state is None:
+                state = _tops.prepare_pruning(codes, int(b), bn, perm=perm)
+                jax.block_until_ready(state)
+
+        # probe validation: pruned-over-new-state must be bit-identical
+        # to the unpruned fused sweep over the same codes
+        validated = False
+        if state is not None:
+            probe = jax.random.normal(
+                jax.random.PRNGKey(self.probe_seed),
+                (self.probe_batch, codes.shape[1], int(b)), jnp.float32)
+            k = min(self.probe_k, N)
+            rv, ri = _tops.jpq_topk_lut(probe, codes, k)
+            pv, pi = _tops.jpq_topk_lut(probe, codes, k, prune=state)
+            if not (np.array_equal(np.asarray(rv), np.asarray(pv))
+                    and np.array_equal(np.asarray(ri), np.asarray(pi))):
+                raise ValueError(
+                    f"catalogue v{version} failed probe validation: "
+                    f"pruned top-{k} diverged from the unpruned fused "
+                    f"sweep — refusing to swap")
+            validated = True
+
+        entry = CatalogueVersion(
+            version=version, codes=codes, b=int(b), state=state, key=key,
+            perm=None if perm is None else np.asarray(perm),
+            built_s=time.perf_counter() - t0, validated=validated)
+        with self._lock:
+            if state is not None:
+                self._states[key] = state
+            # versions race only through block=False publishes; never
+            # let a slow old build clobber a newer live catalogue
+            if self._live is None or version > self._live.version:
+                self._live = entry
+                self.swap_count += 1

@@ -1,0 +1,188 @@
+"""Data-parallel serving replicas over one model-sharded catalogue.
+
+A ``Replica`` binds (model, params) and serves padded fixed-shape
+batches from the micro-batching queue through the existing fused serve
+path (``core.serve.retrieve_topk`` via ``TwoTower.retrieve`` /
+``SeqRecModel.retrieve_topk``), with the live catalogue version's
+prebuilt ``PruneState`` and an optional per-replica warm-threshold EMA.
+
+**Jit discipline.**  The dispatch function is jit-compiled once per
+``(catalogue version, bucket length)`` and cached — the ``PruneState``
+is *closed over* (its ``block_n`` / ``tie_break_ids`` fields are
+Python ints that must stay static), while the warm floor is a traced
+``[max_batch]`` argument so EMA updates never retrigger compilation.
+Fixed ``[max_batch, L_bucket]`` shapes keep per-row results bitwise
+stable (see ``serve.queue``).
+
+**Warm floors and dummy rows.**  The floor for padding rows (row ≥
+``n_real``) is forced to −inf before dispatch: a dummy all-pad row
+scores junk, and a finite floor over junk could demote and re-sweep the
+whole batch for rows nobody asked about.  Symmetrically, only
+``theta[:n_real]`` is folded back into the EMA — a dummy row's
+threshold describes no real query.  Exactness does not depend on any
+of this (the demotion rule repairs every overshoot); it is purely a
+perf hygiene rule.
+
+``ReplicaPool`` round-robins batches over replicas and periodically
+merges their warm EMAs (``ThresholdState.merge`` — a pure host-side
+min-reduce, so replicas share pruning progress without sharing device
+state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.serve import ThresholdState
+from repro.serve.queue import Batch
+from repro.serve.registry import CatalogueVersion
+
+
+@dataclasses.dataclass
+class Result:
+    """One completed request: top-k over the catalogue version that was
+    live when the batch flushed."""
+    rid: int
+    values: np.ndarray                # [k] f32
+    ids: np.ndarray                   # [k] i32
+    version: int
+    warm_hit: bool = False
+
+
+def _bind_retrieve(model, params, k: int) -> Callable:
+    """Adapter: (hist [B, L], prune, warm, return_stats) -> retrieve
+    call on whichever serve entrypoint the model exposes."""
+    if hasattr(model, "retrieve"):                        # TwoTower
+        def fn(hist, *, prune=None, warm=None, return_stats=False):
+            return model.retrieve(params, {"user_hist": hist}, top_k=k,
+                                  prune=prune, warm=warm,
+                                  return_stats=return_stats)
+        return fn
+    if hasattr(model, "retrieve_topk"):                   # SeqRecModel
+        def fn(hist, *, prune=None, warm=None, return_stats=False):
+            return model.retrieve_topk(params, hist, k=k, prune=prune,
+                                       warm=warm,
+                                       return_stats=return_stats)
+        return fn
+    raise TypeError(f"{type(model).__name__} exposes neither "
+                    f".retrieve nor .retrieve_topk")
+
+
+class Replica:
+    """One serving worker: jit cache + warm EMA over a bound model."""
+
+    def __init__(self, model, params, *, k: int,
+                 warm: Optional[ThresholdState] = None,
+                 name: str = "replica0"):
+        self.name = name
+        self.k = int(k)
+        self.warm = warm
+        self._retrieve = _bind_retrieve(model, params, self.k)
+        # (version, bucket_len) -> jitted dispatch fn
+        self._jit: Dict[Tuple[int, int], Callable] = {}
+        self.batches_served = 0
+
+    # ------------------------------------------------------------- jit
+    def _dispatch_fn(self, version: CatalogueVersion,
+                     bucket_len: int) -> Callable:
+        key = (version.version, bucket_len)
+        fn = self._jit.get(key)
+        if fn is None:
+            import jax
+            state = version.state            # closed over: static ints
+            if state is not None:
+                def run(hist, floor):
+                    return self._retrieve(hist, prune=state, warm=floor,
+                                          return_stats=True)
+            else:
+                def run(hist, floor):
+                    del floor                # unpruned path: no knobs
+                    return self._retrieve(hist)
+            fn = jax.jit(run)
+            self._jit[key] = fn
+        return fn
+
+    # ----------------------------------------------------------- serve
+    def serve(self, batch: Batch,
+              version: CatalogueVersion) -> Tuple[List[Result], dict]:
+        """Serve one padded batch; returns per-request results (real
+        rows only) and a host-side summary dict for metrics."""
+        hist = batch.padded_hist()                 # [max_batch, L]
+        n_real = batch.n_real
+        floor = (self.warm.floor(batch.max_batch) if self.warm is not None
+                 else np.full((batch.max_batch,), -np.inf, np.float32))
+        floor[n_real:] = -np.float32(np.inf)       # dummy rows: cold
+        out = self._dispatch_fn(version, batch.bucket_len)(hist, floor)
+
+        summary = {"skipped": 0.0, "total": 0.0,
+                   "warm_hits": 0, "warm_total": 0}
+        hit_rows = np.zeros((n_real,), bool)
+        if version.state is not None:
+            vals, ids, stats = out
+            theta = np.asarray(stats["theta"])[:n_real]
+            demoted = np.asarray(stats["demoted"])[:n_real]
+            if self.warm is not None:
+                warmed = np.isfinite(floor[:n_real])
+                hit_rows = warmed & ~demoted       # the floor held
+                summary["warm_hits"] = int(hit_rows.sum())
+                summary["warm_total"] = n_real
+                self.warm.update(theta)            # real rows only
+            summary["skipped"] = float(
+                np.asarray(stats["skipped_tiles"]).sum())
+            summary["total"] = float(
+                np.asarray(stats["total_tiles"]).sum())
+        else:
+            vals, ids = out
+        vals = np.asarray(vals)
+        ids = np.asarray(ids)
+        self.batches_served += 1
+        results = [
+            Result(r.rid, vals[i].copy(), ids[i].copy(), version.version,
+                   warm_hit=bool(hit_rows[i]))
+            for i, r in enumerate(batch.requests)]
+        return results, summary
+
+
+class ReplicaPool:
+    """Round-robin pool of replicas with periodic warm-floor merging.
+
+    ``merge_every`` batches, every replica's ThresholdState is folded
+    through ``ThresholdState.merge`` (min-reduce + adopt), so a floor
+    learned on one replica prunes traffic on all of them.  0 disables
+    merging (independent floors)."""
+
+    def __init__(self, replicas: List[Replica], *, merge_every: int = 0):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        self.merge_every = int(merge_every)
+        self._next = 0
+        self._since_merge = 0
+        self.merge_count = 0
+
+    def serve(self, batch: Batch,
+              version: CatalogueVersion) -> Tuple[List[Result], dict]:
+        rep = self.replicas[self._next]
+        self._next = (self._next + 1) % len(self.replicas)
+        out = rep.serve(batch, version)
+        self._since_merge += 1
+        if self.merge_every and self._since_merge >= self.merge_every:
+            self.merge_warm()
+            self._since_merge = 0
+        return out
+
+    def merge_warm(self):
+        states = [r.warm for r in self.replicas if r.warm is not None]
+        if len(states) < 2:
+            return None
+        self.merge_count += 1
+        return ThresholdState.merge(states)
+
+    def reset_warm(self):
+        """Cold-restart every replica's floor — the hot-swap rule: old
+        thresholds describe a catalogue that no longer exists."""
+        for r in self.replicas:
+            if r.warm is not None:
+                r.warm.reset()

@@ -11,7 +11,7 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 RUN = os.path.join(ROOT, "benchmarks", "run.py")
 
 EXPECTED = {"table2", "table45", "fig3", "fig4", "jpq_scoring",
-            "jpq_topk", "kernels", "grad_exchange"}
+            "jpq_topk", "serve_latency", "kernels", "grad_exchange"}
 
 
 def _run_smoke():
@@ -70,6 +70,21 @@ class TestBenchmarkSmoke:
         pb_i, fr_i = parse(rows["grad_exchange/int8"])
         assert fr_n == 1.0 and pb_b * 2 == pb_n and pb_i * 4 == pb_n
         assert abs(fr_b - 0.5) < 1e-6 and abs(fr_i - 0.25) < 1e-6
+
+    def test_serve_latency_rows(self):
+        """All three server configs report latency percentiles under
+        Poisson load; the warm-merged config reports a warm-hit rate."""
+        rows = {r["name"]: r["derived"] for r in self.rows
+                if r["name"].startswith("serve_latency/")}
+        assert set(rows) == {"serve_latency/sync-loop",
+                             "serve_latency/queue",
+                             "serve_latency/queue+warm-merged"}
+        for name, d in rows.items():
+            assert re.search(r"p50_ms=[0-9.]+", d), (name, d)
+            assert re.search(r"p99_ms=[0-9.]+", d), (name, d)
+            assert re.search(r"qdepth_mean=[0-9.]+", d), (name, d)
+        assert re.search(r"warm_hit_rate=[0-9.]+",
+                         rows["serve_latency/queue+warm-merged"])
 
     def test_jpq_topk_rows_exact(self):
         rows = [r for r in self.rows

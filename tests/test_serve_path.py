@@ -217,6 +217,47 @@ class TestMakeRequests:
                                           rb["user_hist"])
         assert not np.array_equal(a[0]["user_hist"], c[0]["user_hist"])
 
+    def test_reserved_ids_never_drawn(self):
+        """Retrieval ids are 1-based with row 0 = padding (and [MASK]
+        for sequential heads): the uniform draw must exclude them, or
+        synthetic requests ask the model about rows no real request
+        contains."""
+        from repro.launch.serve import make_requests
+        tmpl = {"user_hist": np.arange(0, 32).reshape(4, 8)
+                .astype(np.int32)}
+        reqs = list(make_requests(tmpl, 16, 5, seed=0, reserved=(0, 31)))
+        for r in reqs:
+            assert 0 not in r["user_hist"]
+            assert 31 not in r["user_hist"]
+            assert r["user_hist"].min() >= 1
+            assert r["user_hist"].max() <= 30
+
+    def test_reserved_degenerate_range_falls_back(self):
+        """A field whose whole observed range is reserved keeps the
+        template range instead of drawing from an empty set."""
+        from repro.launch.serve import make_requests
+        tmpl = {"pos_item": np.zeros((4,), np.int32)}
+        (req,) = make_requests(tmpl, 8, 1, seed=0, reserved=(0,))
+        assert req["pos_item"].shape == (8,)
+
+    def test_float_fields_row_sampled_not_tiled(self):
+        """The old tile path concatenated template copies and truncated:
+        a batch smaller than the template replayed the SAME leading rows
+        every iteration and never dispatched the tail.  Rows must be
+        sampled — every output row a template row, tail rows reachable."""
+        from repro.launch.serve import make_requests
+        rows = np.arange(20, dtype=np.float32).reshape(5, 4)
+        reqs = list(make_requests({"dense": rows}, 2, 20, seed=0))
+        row_set = {tuple(r) for r in rows}
+        seen = set()
+        for r in reqs:
+            assert r["dense"].shape == (2, 4)
+            for out in r["dense"]:
+                assert tuple(out) in row_set
+                seen.add(int(out[0]) // 4)
+        assert seen.issuperset({2, 3, 4}), \
+            f"tail template rows never sampled: {sorted(seen)}"
+
     def test_serve_loop_runs_end_to_end(self):
         """The CLI itself, fused and not, in a subprocess (real argv)."""
         env = dict(os.environ, PYTHONPATH=SRC)
