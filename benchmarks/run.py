@@ -517,6 +517,63 @@ def grad_exchange(fast: bool = True):
         _row(f"grad_exchange/{method}", f"{us:.0f}",
              f"payload_bytes={pb};exchange_fraction={pb / full:.4f}")
 
+    # ---- fsdp composition: per-round wire bytes from the lowered HLO
+    # (docs/sharding.md byte model).  The dp collect all-gathers every
+    # device's contribution stack (~V x payload on the wire); the fsdp
+    # collect's tiled all-to-all ships one payload per round split
+    # across devices, plus one param all-gather per *step*.  Measured
+    # on a V-row-divisible toy so every float leaf shards and the wire
+    # numbers are clean (SASRec's ragged leading dims would leave some
+    # leaves replicated and blur the ratio).
+    from repro.dist.hlo import collective_bytes
+    D, V = jax.device_count(), 8
+    if V % D == 0:
+        w_fs = {"w": jnp.zeros((1024, 32), jnp.float32),
+                "b": jnp.zeros((3,), jnp.float32)}
+        batch_fs = {"x": jnp.zeros((16, 1024), jnp.float32),
+                    "y": jnp.zeros((16, 32), jnp.float32)}
+
+        def loss_fs(vals, bt):
+            pred = bt["x"] @ vals["w"] + vals["b"][:1]
+            return jnp.mean((pred - bt["y"]) ** 2)
+
+        mesh_f = make_host_mesh(D)
+
+        def _collect_bytes(fn, vals):
+            err = compression.zeros_error_state(w_fs, V)
+            e_r = jax.tree.map(lambda x: x[np.arange(D)], err)
+            b_r = jax.tree.map(
+                lambda x: x.reshape((V, x.shape[0] // V) + x.shape[1:]),
+                batch_fs)
+            vals_full = fn.gather(vals) if fn.fsdp else vals
+            hlo = fn.collect.lower(vals_full, e_r, b_r, None,
+                                   jnp.int32(0)).compile().as_text()
+            return collective_bytes(hlo)["per_op_bytes"]
+
+        for method in compression.METHODS:
+            pb = compression.payload_bytes(w_fs, method)
+            f_dp = compression.make_dp_grad_fn(
+                loss_fs, mesh_f, method=method, accum_shards=V)
+            f_fs = compression.make_dp_grad_fn(
+                loss_fs, mesh_f, method=method, accum_shards=V,
+                fsdp=True)
+            ag = _collect_bytes(f_dp, w_fs).get("all-gather", 0)
+            vals_s = jax.device_put(
+                w_fs, compression.fsdp_shardings(w_fs, mesh_f, V))
+            a2a = _collect_bytes(f_fs, vals_s).get("all-to-all", 0)
+            err_s = compression.zeros_error_state(w_fs, V)
+            err_s = jax.device_put(err_s, jax.tree.map(
+                lambda _: jax.sharding.NamedSharding(
+                    mesh_f, compression.dp_partition_spec(mesh_f)),
+                err_s))
+            us = time_fn(lambda: f_fs(vals_s, err_s, batch_fs)[0],
+                         iters=3, warmup=1)
+            _row(f"grad_exchange/fsdp/{method}", f"{us:.0f}",
+                 f"alltoall_bytes_per_round={a2a};"
+                 f"dp_allgather_bytes={ag};"
+                 f"reduction={ag / max(a2a, 1):.1f}x;"
+                 f"payload_bytes={pb}")
+
 
 # ----------------------------------------------------------- roofline
 

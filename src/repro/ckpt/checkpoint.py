@@ -102,11 +102,14 @@ def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
     ``shardings``: optional matching pytree of NamedSharding — leaves are
     device_put with the *target* sharding (elastic re-mesh restore:
     params, opt state and error-feedback state written on mesh A are
-    re-laid-out onto mesh B).  ``strict=False`` keeps the ``like`` leaf
-    for keys absent from the checkpoint (e.g. resuming a pre-dp-path
-    checkpoint whose error-feedback state doesn't exist yet) instead of
-    raising; shape mismatches always raise — a silently re-laid-out
-    wrong-shaped leaf would corrupt the run.
+    re-laid-out onto mesh B, including fsdp row-slices whose per-device
+    extent differs between the meshes).  A ``None`` leaf in
+    ``shardings`` skips the device_put for that leaf (kept host-side).
+    ``strict=False`` keeps the ``like`` leaf for keys absent from the
+    checkpoint (e.g. resuming a pre-dp-path checkpoint whose
+    error-feedback state doesn't exist yet) instead of raising; shape
+    mismatches always raise — a silently re-laid-out wrong-shaped leaf
+    would corrupt the run.
     Returns (tree, step).
     """
     if step is None:
@@ -122,14 +125,23 @@ def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
              jax.tree_util.tree_flatten_with_path(like)[0]]
     del leaves_like
     new_leaves = []
-    flat_shardings = (jax.tree_util.tree_flatten(shardings)[0]
-                      if shardings is not None else None)
+    # is_leaf keeps None entries: a plain flatten would drop them and
+    # silently misalign every following sharding with its leaf
+    flat_shardings = (jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: x is None)[0]
+        if shardings is not None else None)
+    if flat_shardings is not None and len(flat_shardings) != len(paths):
+        raise ValueError(
+            f"shardings tree has {len(flat_shardings)} leaves, "
+            f"restore target has {len(paths)}")
     for i, (key, ref) in enumerate(paths):
+        sharding = (flat_shardings[i]
+                    if flat_shardings is not None else None)
         if key not in flat:
             if not strict:
                 arr = np.asarray(ref)
-                if flat_shardings is not None:
-                    arr = jax.device_put(arr, flat_shardings[i])
+                if sharding is not None:
+                    arr = jax.device_put(arr, sharding)
                 new_leaves.append(arr)
                 continue
             raise KeyError(f"checkpoint missing key {key!r}")
@@ -149,8 +161,8 @@ def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
                 arr = arr.view(ref_dt)
             else:
                 arr = arr.astype(ref_dt)
-        if flat_shardings is not None:
-            arr = jax.device_put(arr, flat_shardings[i])
+        if sharding is not None:
+            arr = jax.device_put(arr, sharding)
         new_leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 

@@ -102,14 +102,19 @@ def serve_builder(method: str):
 
 
 def dp_train_step_builder(model, mesh, method: str,
-                          accum_shards: int | None = None):
+                          accum_shards: int | None = None,
+                          fsdp: bool = False):
     """Train-cell variant routed through the elastic compressed
     gradient exchange (repro.dist.compression) so the dry-run's
     collective accounting reflects the bytes the compressed exchange
     actually ships.  Returns ``(fn, err_state_eval_shape)`` where
     ``fn(values, opt_state, err_state, batch) -> (new_values,
     new_opt_state, new_err, loss)``.  Parameters stay replicated on
-    this path (the exchange ships full-leaf payloads)."""
+    the plain path (the exchange ships full-leaf payloads); with
+    ``fsdp=True`` params/moments are row-sharded over the data axes
+    and each round's payload is reduce-scattered instead — the cell's
+    in/out shardings must then come from ``compression.fsdp_shardings``
+    (launch/dryrun.py wires this)."""
     from repro.dist import compression
     from repro.nn import module as nn
     from repro.train.optimizer import OptConfig, apply_updates
@@ -121,12 +126,13 @@ def dp_train_step_builder(model, mesh, method: str,
         loss, _ = model.train_loss(params, batch)
         return loss
 
-    def apply_fn(values, opt_state, grads):
-        return apply_updates(opt_cfg, opt_state, values, grads)
+    def apply_fn(values, opt_state, grads, grad_norm=None):
+        return apply_updates(opt_cfg, opt_state, values, grads,
+                             grad_norm=grad_norm)
 
     step = compression.make_elastic_dp_step(
         loss_fn, mesh, method, accum_shards=accum_shards,
-        apply_fn=apply_fn)
+        apply_fn=apply_fn, fsdp=fsdp)
 
     def fn(values, opt_state, err_state, batch):
         new_values, new_opt, new_err, mets = step(
@@ -139,6 +145,7 @@ def dp_train_step_builder(model, mesh, method: str,
             values_sds)
 
     fn.n_shards = step.n_shards
+    fn.fsdp = fsdp
     return fn, err_shapes
 
 

@@ -34,31 +34,40 @@ _INSTR = re.compile(
 # every "dtype[1,2,3]" inside the result type (layouts are {..}-braced
 # and therefore never match)
 _SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# HLO interleaves "/*index=5*/" comments into wide tuple types; the
+# "=" inside would truncate _INSTR's result group (variadic all-to-all
+# tuples silently lost all elements before the last comment)
+_COMMENT = re.compile(r"/\*.*?\*/")
 
 
-def _shape_bytes(result: str) -> int:
-    total = 0
+def _shape_bytes(result: str) -> Dict[str, int]:
+    """Result-type text -> bytes per dtype token (e.g. {"f32": 128})."""
+    per_dtype: Dict[str, int] = {}
     for dtype, dims in _SHAPE.findall(result):
         size = _DTYPE_BYTES.get(dtype)
         if size is None:
             continue
         elems = math.prod(int(d) for d in dims.split(",") if d) \
             if dims else 1
-        total += elems * size
-    return total
+        per_dtype[dtype] = per_dtype.get(dtype, 0) + elems * size
+    return per_dtype
 
 
 def collective_bytes(hlo_text: str) -> Dict:
     """Parse HLO text -> per-collective byte/count tallies.
 
     Returns ``{"per_op_bytes": {op: bytes}, "per_op_counts": {op: n},
-    "total_bytes": int}`` with only the collective ops that actually
-    occur as keys.
+    "per_op_dtype_bytes": {op: {dtype: bytes}}, "total_bytes": int}``
+    with only the collective ops that actually occur as keys.  The
+    per-dtype split is what lets the conformance suites separate the
+    compressed payload (bf16/s8) from the f32 bookkeeping scalars
+    riding in the same module.
     """
     per_bytes: Dict[str, int] = {}
     per_counts: Dict[str, int] = {}
+    per_dtype: Dict[str, Dict[str, int]] = {}
     for line in hlo_text.splitlines():
-        m = _INSTR.search(line)
+        m = _INSTR.search(_COMMENT.sub("", line))
         if not m:
             continue
         op = m.group("op")
@@ -75,11 +84,16 @@ def collective_bytes(hlo_text: str) -> Dict:
             # it, matching the sync-op convention
             shapes = _SHAPE.findall(result)
             result = "".join(f"{d}[{s}]" for d, s in shapes[-1:])
-        nbytes = _shape_bytes(result)
+        dt_bytes = _shape_bytes(result)
+        nbytes = sum(dt_bytes.values())
         per_bytes[base] = per_bytes.get(base, 0) + nbytes
         per_counts[base] = per_counts.get(base, 0) + 1
+        acc = per_dtype.setdefault(base, {})
+        for dt, b in dt_bytes.items():
+            acc[dt] = acc.get(dt, 0) + b
     return {
         "per_op_bytes": per_bytes,
         "per_op_counts": per_counts,
+        "per_op_dtype_bytes": per_dtype,
         "total_bytes": sum(per_bytes.values()),
     }

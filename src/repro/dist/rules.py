@@ -52,6 +52,20 @@ DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
 DATA_AXES = ("pod", "data")
 
 
+def data_mesh_axes(mesh) -> Tuple[str, ...]:
+    """The mesh axes that carry data parallelism, in the row-major
+    order every dp collective (all-gather, all-to-all) concatenates
+    over.  Falls back to the mesh's first axis for meshes with no
+    pod/data axis (e.g. a pure ("model",) mesh) so the dp degree is
+    never zero — the single resolution rule shared by
+    ``dist.data_shard_count``, ``dist.compression`` and the FSDP
+    parameter-slicing specs."""
+    axes = tuple(a for a in DATA_AXES if a in mesh.shape)
+    if not axes:
+        axes = (tuple(mesh.shape)[0],)
+    return axes
+
+
 class _Ctx(threading.local):
     """Ambient (mesh, rules) installed by use_mesh_rules."""
 

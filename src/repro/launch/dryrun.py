@@ -51,14 +51,18 @@ def _replicated_or_param(mesh, s, p_sh):
 
 def build_cell_args(bundle, cell, model, mesh, rules=None, *,
                     serve_kwargs=None, grad_compression=None,
-                    accum_shards=None):
+                    accum_shards=None, fsdp=False):
     """Returns (fn, args tuple of SDS-with-sharding, donate_argnums).
 
     ``serve_kwargs``: forwarded to serve-cell builders (fused/prune
     variants — builders drop keys their method doesn't accept).
     ``grad_compression``: route train cells through the elastic
     compressed-gradient exchange (configs.base.dp_train_step_builder)
-    so the collective accounting shows the compressed payload bytes."""
+    so the collective accounting shows the compressed payload bytes.
+    ``fsdp``: row-shard params/moments over the data axes and lower the
+    reduce-scatter exchange variant — input shardings come from
+    ``compression.fsdp_shardings`` so the analysis sees the per-device
+    slices."""
     params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     model._params_meta = params_sds
     values_sds = nn.values(params_sds)
@@ -82,14 +86,23 @@ def build_cell_args(bundle, cell, model, mesh, rules=None, *,
             from repro.dist import compression
             fn, err_shapes = dp_train_step_builder(
                 model, mesh, grad_compression,
-                accum_shards=accum_shards)
+                accum_shards=accum_shards, fsdp=fsdp)
             repl = NamedSharding(mesh, PartitionSpec())
             err_sh = NamedSharding(mesh,
                                    compression.dp_partition_spec(mesh))
-            values_in = _attach(values_sds,
-                                jax.tree.map(lambda _: repl, values_sds))
-            opt_in = _attach(opt_sds,
-                             jax.tree.map(lambda _: repl, opt_sds))
+            if fsdp:
+                values_shs = compression.fsdp_shardings(
+                    values_sds, mesh, fn.n_shards)
+                opt_shs = compression.fsdp_shardings(
+                    opt_sds, mesh, fn.n_shards)
+                values_in = _attach(values_sds, values_shs)
+                opt_in = _attach(opt_sds, opt_shs)
+            else:
+                values_in = _attach(values_sds,
+                                    jax.tree.map(lambda _: repl,
+                                                 values_sds))
+                opt_in = _attach(opt_sds,
+                                 jax.tree.map(lambda _: repl, opt_sds))
             err_sds = err_shapes(values_sds)
             err_in = _attach(err_sds,
                              jax.tree.map(lambda _: err_sh, err_sds))
@@ -120,7 +133,7 @@ def build_cell_args(bundle, cell, model, mesh, rules=None, *,
 def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              rules=None, save: bool = True, force: bool = False,
              tag: str = "", serve_kwargs=None, grad_compression=None,
-             accum_shards=None) -> dict:
+             accum_shards=None, fsdp=False) -> dict:
     mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
     os.makedirs(os.path.join(RESULTS_DIR, mesh_name), exist_ok=True)
     out_path = os.path.join(RESULTS_DIR, mesh_name,
@@ -148,7 +161,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         fn, args, donate = build_cell_args(
             bundle, cell, model, mesh, rules,
             serve_kwargs=serve_kwargs, grad_compression=grad_compression,
-            accum_shards=accum_shards)
+            accum_shards=accum_shards, fsdp=fsdp)
         with dist.use_mesh_rules(mesh, rules):
             jfn = jax.jit(fn, donate_argnums=donate)
             lowered = jfn.lower(*args)
@@ -221,7 +234,15 @@ def main():
                          "compressed-gradient exchange so collective "
                          "bytes reflect the compressed payloads")
     ap.add_argument("--grad-accum-shards", type=int, default=None)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="row-shard train-cell params/moments over the "
+                         "data axes; the exchange lowers to per-round "
+                         "reduce-scatter-sized all-to-alls (requires "
+                         "--grad-compression)")
     args = ap.parse_args()
+    if args.fsdp and not args.grad_compression:
+        ap.error("--fsdp requires --grad-compression (the sharded "
+                 "exchange is a property of the dp train path)")
 
     serve_kwargs = {}
     if args.serve_fused is not None:
@@ -232,6 +253,7 @@ def main():
     if not args.tag:        # variants must not overwrite the baseline
         bits = ([f"gc-{args.grad_compression}"]
                 if args.grad_compression else [])
+        bits += ["fsdp"] if args.fsdp else []
         bits += ["prune"] if args.serve_prune else []
         bits += ["nofused"] if args.serve_fused is False else []
         args.tag = "-" + "-".join(bits) if bits else ""
@@ -252,7 +274,8 @@ def main():
                        force=args.force, tag=args.tag,
                        serve_kwargs=serve_kwargs,
                        grad_compression=args.grad_compression,
-                       accum_shards=args.grad_accum_shards)
+                       accum_shards=args.grad_accum_shards,
+                       fsdp=args.fsdp)
         status = ("SKIP: " + rec["skipped"][:60] if "skipped" in rec
                   else "ERROR: " + rec.get("error", "")[:120]
                   if "error" in rec else

@@ -16,7 +16,11 @@ SIGTERM -> save-and-exit, automatic resume from --ckpt-dir.  With
 a *differently-sized* mesh: ``--mesh 4`` after an 8-device run restores
 params, opt state and error-feedback state onto the new mesh and
 continues bit-identically to an uninterrupted run (elastic restore,
-docs/sharding.md).
+docs/sharding.md).  --fsdp additionally row-shards params, optimizer
+moments and error state across the data axes and turns each exchange
+round's all-gather into a reduce-scatter-sized all-to-all; the elastic
+contract is preserved — an --fsdp run killed on 8 devices resumes
+bit-identically on 4.
 """
 import argparse
 import os
@@ -55,6 +59,11 @@ def main():
     ap.add_argument("--grad-accum-shards", type=int, default=None,
                     help="fixed virtual shard count; keep it constant "
                          "across elastic restarts")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="row-shard params/moments/error state over the "
+                         "data axes and reduce-scatter each exchange "
+                         "round (docs/sharding.md); composes with "
+                         "--grad-compression and elastic restarts")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -77,7 +86,7 @@ def main():
 
     mesh = None
     if args.devices > 1 or args.grad_compression is not None \
-            or args.grad_accum_shards is not None:
+            or args.grad_accum_shards is not None or args.fsdp:
         # the grad-compression path needs a mesh even single-device
         # (a (1, 1) host mesh: one data shard, V accumulation rounds)
         mesh = make_host_mesh(args.devices, args.model_axis)
@@ -144,6 +153,7 @@ def main():
                              microbatches=args.microbatches,
                              grad_compression=args.grad_compression,
                              grad_accum_shards=args.grad_accum_shards,
+                             fsdp=args.fsdp,
                              seed=args.seed),
                  data_fn=data_fn, eval_fn=eval_fn, mesh=mesh)
     _, hist = tr.run()

@@ -22,6 +22,7 @@ METRICS_SCHEMA = {
     "config": str,
     "requests_submitted": int,
     "requests_completed": int,
+    "requests_pending": int,
     "requests_dropped": int,
     "requests_duplicated": int,
     "batches": int,
@@ -44,6 +45,7 @@ class ServerMetrics:
         self._depths: List[int] = []
         self._occ: List[float] = []
         self._submitted = 0
+        self._dropped = 0
         self._completed: Dict[int, int] = {}     # rid -> completions
         self._skipped = 0.0
         self._tiles = 0.0
@@ -58,6 +60,15 @@ class ServerMetrics:
     def record_complete(self, rid: int, latency_s: float) -> None:
         self._completed[rid] = self._completed.get(rid, 0) + 1
         self._lat_ms.append(latency_s * 1e3)
+
+    def record_drop(self, rid: int) -> None:
+        """A request the server gave up on (shed, timed out, replica
+        lost).  Nothing in the current pipeline drops, so this stays 0
+        unless a policy explicitly calls it — which is exactly what
+        makes ``requests_dropped`` mean *dropped*: snapshots used to
+        report ``submitted - completed``, counting every still-queued
+        in-flight request as dropped on any mid-run snapshot."""
+        self._dropped += 1
 
     def record_queue_depth(self, depth: int) -> None:
         self._depths.append(int(depth))
@@ -87,7 +98,9 @@ class ServerMetrics:
             "config": self.config,
             "requests_submitted": self._submitted,
             "requests_completed": completed,
-            "requests_dropped": self._submitted - completed,
+            "requests_pending": self._submitted - completed
+            - self._dropped,
+            "requests_dropped": self._dropped,
             "requests_duplicated": duplicated,
             "batches": len(self._occ),
             "batch_occupancy": float(np.mean(self._occ))
@@ -146,7 +159,8 @@ def validate_snapshot(snap: dict,
                 or lat["max"] == 0.0):
             errs.append("latency_ms: percentiles not monotonic")
         for k in ("requests_submitted", "requests_completed",
-                  "requests_dropped", "requests_duplicated", "batches"):
+                  "requests_pending", "requests_dropped",
+                  "requests_duplicated", "batches"):
             if snap[k] < 0:
                 errs.append(f"{k}: negative")
     return errs

@@ -112,8 +112,20 @@ class MicroBatchQueue:
         return self.buckets[-1]
 
     def submit(self, hist, rid: Optional[int] = None) -> int:
-        req = Request(next(self._rid) if rid is None else rid, hist,
-                      t_submit=self.clock())
+        if rid is None:
+            rid = next(self._rid)
+        elif rid >= 0:
+            # the internal counter owns the non-negative id space; an
+            # explicit rid that lands in it collides with a queued or
+            # future request — duplicate rows in flight merge in the
+            # metrics' _completed map and the duplicate counter lies.
+            # Callers with their own ids use the negative namespace
+            # (the warm-up path's Request(-1, ...) convention).
+            raise ValueError(
+                f"explicit rid must be negative (caller namespace); "
+                f"got {rid}, which can collide with the queue's "
+                f"internal non-negative ids")
+        req = Request(rid, hist, t_submit=self.clock())
         self._pending[self.bucket_of(req.hist.size)].append(req)
         return req.rid
 

@@ -56,6 +56,14 @@ class TrainConfig:
     # the legacy fp32 jit-sharded step.
     grad_compression: Optional[str] = None
     grad_accum_shards: Optional[int] = None
+    # FSDP composition of the elastic exchange: each device owns a 1/D
+    # row-slice of params + Adam moments (leaves whose leading dim is
+    # divisible by the virtual-shard count; everything else stays
+    # replicated), parameters are all-gathered once per step, and the
+    # per-round payload collective becomes an ordered reduce-scatter —
+    # `payload` wire bytes per device per round instead of V x payload.
+    # Implies the dp path; preserves the bitwise-elastic contract.
+    fsdp: bool = False
 
 
 class Trainer:
@@ -81,12 +89,15 @@ class Trainer:
         if method not in compression.METHODS:
             raise ValueError(f"unknown grad_compression {method!r}")
         self._dp_method = method
+        self._fsdp = train_cfg.fsdp
         self._use_dp = (train_cfg.grad_compression is not None
                         or train_cfg.grad_accum_shards is not None
+                        or train_cfg.fsdp
                         or method != "none")
         if self._use_dp and mesh is None:
             raise ValueError(
-                "grad_compression / grad_accum_shards require a mesh")
+                "grad_compression / grad_accum_shards / fsdp "
+                "require a mesh")
         if self._use_dp and train_cfg.microbatches > 1:
             raise ValueError(
                 "grad_compression already accumulates over "
@@ -162,9 +173,11 @@ class Trainer:
         sharding.md §Gradient compression in the Trainer): returns
         ``step(values, opt_state, err_state, batch, rng) ->
         (new_values, new_opt, new_err, mets)``.  Parameters stay
-        replicated on the dp path (the exchange ships full-leaf
-        payloads); per-virtual-shard rng folds keep dropout masks
-        mesh-invariant."""
+        replicated on the plain dp path (the exchange ships full-leaf
+        payloads); with ``cfg.fsdp`` params/moments are row-sharded and
+        the exchange reduce-scatters each round's payload instead
+        (docs/sharding.md §FSDP-composed exchange).  Per-virtual-shard
+        rng folds keep dropout masks mesh-invariant either way."""
         model, opt_cfg = self.model, self.opt_cfg
 
         def loss_fn(values, batch, rng):
@@ -172,34 +185,50 @@ class Trainer:
             loss, mets = model.train_loss(params, batch, rng)
             return loss, mets
 
-        def apply_fn(values, opt_state, grads):
-            return apply_updates(opt_cfg, opt_state, values, grads)
+        def apply_fn(values, opt_state, grads, grad_norm=None):
+            return apply_updates(opt_cfg, opt_state, values, grads,
+                                 grad_norm=grad_norm)
 
         return compression.make_elastic_dp_step(
             loss_fn, self.mesh, self._dp_method,
             accum_shards=self._accum, has_aux=True, with_rng=True,
-            apply_fn=apply_fn)
+            apply_fn=apply_fn, fsdp=self._fsdp)
 
     def _payload_metrics(self, values):
         """Static per-step exchange accounting rows (the conformance
         suite cross-checks these against the HLO collective bytes)."""
         pb = compression.payload_bytes(values, self._dp_method)
         full = compression.payload_bytes(values, "none")
+        rounds = self._accum // compression.dp_shard_count(self.mesh)
+        # payload-collective bytes through one device per step: the dp
+        # path all-gathers every virtual shard's payload (V x pb), the
+        # fsdp path reduce-scatters one payload per round (L x pb; the
+        # once-per-step parameter gather is accounted separately)
+        wire = pb * (rounds if self._fsdp else self._accum)
         return {"payload_bytes": pb,
                 "exchange_fraction": pb / full if full else 0.0,
-                "exchange_shards": self._accum}
+                "exchange_shards": self._accum,
+                "exchange_fsdp": int(self._fsdp),
+                "exchange_wire_bytes": wire}
 
     # ------------------------------------------------------------- run
     def run(self, rng=None, resume: bool = True):
         cfg = self.cfg
         self._install_sigterm()
+        # per-run watchdog baseline: medians from a previous run() on
+        # this Trainer are stale (different mesh, compile state, ...)
+        self._step_times = []
         rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
         params_meta = self.model.init_params(rng)
         values = nn.values(params_meta)
         opt_state = init_opt_state(values)
         err_state = (compression.zeros_error_state(values, self._accum)
                      if self._use_dp else None)
+        if self._fsdp:
+            values, opt_state, err_state = self._fsdp_layout(
+                values, opt_state, err_state)
         start_step = 0
+        best_metric, stale = -np.inf, 0
 
         ckpt = None
         if cfg.ckpt_dir:
@@ -226,6 +255,19 @@ class Trainer:
                         step=start_step, shardings=err_sh,
                         strict=False)
                     err_state = err_tree["err"]
+                # early-stop state rides next to "opt" (strict=False:
+                # absent in older checkpoints).  Without it a resumed
+                # run re-armed the full patience window and could train
+                # past where the uninterrupted run stopped — breaking
+                # run-equivalence.  No shardings: host scalars, and a
+                # device_put would truncate the f64 best metric.
+                es_tree, _ = restore_checkpoint(
+                    cfg.ckpt_dir,
+                    {"early_stop": {"best": np.float64(-np.inf),
+                                    "stale": np.int64(0)}},
+                    step=start_step, strict=False)
+                best_metric = float(es_tree["early_stop"]["best"])
+                stale = int(es_tree["early_stop"]["stale"])
 
         if self._use_dp:
             train_step = self._build_dp_step(params_meta)
@@ -243,7 +285,6 @@ class Trainer:
             else:
                 train_step = jax.jit(train_step, donate_argnums=(0, 1))
 
-        best_metric, stale = -np.inf, 0
         # the final checkpoint must be stamped with the step actually
         # reached: stamping cfg.steps after a preemption/early-stop
         # break made resume restore AT cfg.steps and skip the remaining
@@ -260,7 +301,9 @@ class Trainer:
                         if self._use_dp else {})
 
         def _ckpt_state():
-            state = {"values": values, "opt": opt_state}
+            state = {"values": values, "opt": opt_state,
+                     "early_stop": {"best": np.float64(best_metric),
+                                    "stale": np.int64(stale)}}
             if self._use_dp:
                 state["err"] = err_state
             return state
@@ -315,12 +358,29 @@ class Trainer:
         self.err_state = err_state
         return nn.with_values(params_meta, values), self.history
 
+    def _fsdp_layout(self, values, opt_state, err_state):
+        """Lay freshly-initialised state out per the fsdp sharding rule
+        (V-divisible float leaves row-sharded over the data axes, error
+        rows over the virtual-shard axis).  Restore re-lays checkpoints
+        the same way via ``_state_shardings``."""
+        from jax.sharding import NamedSharding
+        values = jax.device_put(values, compression.fsdp_shardings(
+            values, self.mesh, self._accum))
+        opt_state = jax.device_put(opt_state, compression.fsdp_shardings(
+            opt_state, self.mesh, self._accum))
+        if err_state is not None:
+            row = NamedSharding(self.mesh,
+                                compression.dp_partition_spec(self.mesh))
+            err_state = jax.device_put(
+                err_state, jax.tree.map(lambda _: row, err_state))
+        return values, opt_state, err_state
+
     def _state_shardings(self, params_meta, state):
         """Target shardings for (elastic) checkpoint restore, matching
         whatever subtrees ``state`` carries.  The dp path keeps
-        params/opt replicated and rows the error-feedback state over
-        the data axes; the jit path reuses the logical-axis
-        resolution."""
+        params/opt replicated (row-sharded under fsdp) and rows the
+        error-feedback state over the data axes; the jit path reuses
+        the logical-axis resolution."""
         from jax.sharding import NamedSharding, PartitionSpec
         repl = NamedSharding(self.mesh, PartitionSpec())
         sh = {}
@@ -330,7 +390,11 @@ class Trainer:
                     self.mesh, compression.dp_partition_spec(self.mesh))
                 sh[key] = jax.tree.map(lambda _: err_sh, tree)
             elif self._use_dp:
-                sh[key] = jax.tree.map(lambda _: repl, tree)
+                if self._fsdp and key in ("values", "opt"):
+                    sh[key] = compression.fsdp_shardings(
+                        tree, self.mesh, self._accum)
+                else:
+                    sh[key] = jax.tree.map(lambda _: repl, tree)
             elif key == "values":
                 sh[key] = dist.params_shardings(params_meta, self.mesh,
                                                 self.rules)

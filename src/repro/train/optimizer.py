@@ -78,11 +78,25 @@ def global_norm(grads):
     return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
 
 
-def apply_updates(cfg: OptConfig, state, values, grads):
-    """Returns (new_values, new_state, stats)."""
+def apply_updates(cfg: OptConfig, state, values, grads, *,
+                  grad_norm=None):
+    """Returns (new_values, new_state, stats).
+
+    Every per-parameter op is elementwise, so the update runs unchanged
+    on FSDP row-slices: the fsdp combine module calls this on each
+    device's owned slice and injects the bitwise-deterministic global
+    norm via ``grad_norm=`` (when ``None`` the norm is computed here
+    from the full grads tree).
+
+    ``weight_decay`` is **decoupled** (Loshchilov & Hutter) for every
+    kind — added to the update after the gradient/moment term, scaled
+    by the scheduled lr but not by the clip scale.  Historically sgd
+    and adam silently ignored it, so a sweep cell setting
+    ``kind="sgd", weight_decay=0.1`` trained undecayed.
+    """
     step = state["step"] + 1
     lr = schedule_lr(cfg, step)
-    gn = global_norm(grads)
+    gn = global_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.ones(())
     if cfg.clip_norm is not None:
         scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
@@ -98,12 +112,12 @@ def apply_updates(cfg: OptConfig, state, values, grads):
         g = g.astype(jnp.float32) * scale
         p32 = p.astype(jnp.float32)
         if cfg.kind == "sgd":
-            new_p = p32 - lr * g
-            return new_p.astype(p.dtype), m, v
-        m = b1 * m + (1.0 - b1) * g
-        v = b2 * v + (1.0 - b2) * jnp.square(g)
-        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-        if cfg.kind == "adamw" and cfg.weight_decay > 0:
+            update = g
+        else:
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * jnp.square(g)
+            update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if cfg.weight_decay > 0:
             update = update + cfg.weight_decay * p32
         new_p = p32 - lr * update
         return new_p.astype(p.dtype), m, v

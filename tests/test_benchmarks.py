@@ -55,7 +55,8 @@ class TestBenchmarkSmoke:
 
     def test_grad_exchange_accounting(self):
         rows = {r["name"]: r["derived"] for r in self.rows
-                if r["name"].startswith("grad_exchange/")}
+                if r["name"].startswith("grad_exchange/")
+                and "/fsdp/" not in r["name"]}
         assert set(rows) == {f"grad_exchange/{m}"
                              for m in ("none", "bf16", "int8")}
 
@@ -70,6 +71,26 @@ class TestBenchmarkSmoke:
         pb_i, fr_i = parse(rows["grad_exchange/int8"])
         assert fr_n == 1.0 and pb_b * 2 == pb_n and pb_i * 4 == pb_n
         assert abs(fr_b - 0.5) < 1e-6 and abs(fr_i - 0.25) < 1e-6
+
+    def test_grad_exchange_fsdp_rows(self):
+        """The fsdp composition rows: the per-round all-to-all must be
+        a fraction of the dp path's V-stack all-gather (the wire win
+        the sharded exchange exists for)."""
+        m = re.search(r"host_platform_device_count=(\d+)",
+                      os.environ.get("XLA_FLAGS", ""))
+        if m and 8 % int(m.group(1)) != 0:
+            import pytest
+            pytest.skip("bench skips fsdp rows when the caller-preset "
+                        "device count does not divide V=8")
+        rows = {r["name"]: r["derived"] for r in self.rows
+                if r["name"].startswith("grad_exchange/fsdp/")}
+        assert set(rows) == {f"grad_exchange/fsdp/{m}"
+                             for m in ("none", "bf16", "int8")}
+        for name, d in rows.items():
+            a2a = int(re.search(r"alltoall_bytes_per_round=(\d+)",
+                                d).group(1))
+            ag = int(re.search(r"dp_allgather_bytes=(\d+)", d).group(1))
+            assert 0 < a2a < ag, (name, d)
 
     def test_serve_latency_rows(self):
         """All three server configs report latency percentiles under

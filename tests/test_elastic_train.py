@@ -191,6 +191,62 @@ class TestSigtermElasticResume:
                     f"{k} diverged after elastic resume"
 
 
+class TestSigtermFsdpElasticResume:
+    def test_fsdp_sigterm_8dev_resume_4dev_bit_identical(self):
+        """(b) under FSDP — same production preemption flow with
+        ``--fsdp``: params/moments/error state live row-sharded on the
+        8-device mesh, the checkpoint is written mid-flight, and the
+        ``--mesh 4`` restart re-lays the slices onto the smaller mesh
+        and must still finish bit-for-bit equal to the uninterrupted
+        sharded 8-device run — for every compression method.
+        ``--n-items 62`` makes the embedding table 64 rows so the big
+        leaves really shard (64 % V == 0)."""
+        for method in ("none", "bf16", "int8"):
+            extra = ["--fsdp", "--n-items", "62",
+                     "--grad-compression", method]
+            with tempfile.TemporaryDirectory() as d_int, \
+                    tempfile.TemporaryDirectory() as d_ref:
+                proc = launch_train(extra, d_int, devices=8)
+                deadline = time.time() + 300
+                first_ckpt = os.path.join(d_int, "step_0000000003")
+                while time.time() < deadline and proc.poll() is None:
+                    if os.path.isdir(first_ckpt):
+                        break
+                    time.sleep(0.05)
+                assert os.path.isdir(first_ckpt), \
+                    (method, (proc.communicate()[1] or "")[-2000:])
+                if proc.poll() is None:
+                    proc.send_signal(signal.SIGTERM)
+                out, err = proc.communicate(timeout=300)
+                assert proc.returncode == 0, (method, err[-2000:])
+                reached = max(int(n.split("_")[1])
+                              for n in os.listdir(d_int)
+                              if n.startswith("step_"))
+                assert reached < STEPS, \
+                    f"{method}: completed (step {reached}) pre-SIGTERM"
+                assert "preempted" in out, (method, out)
+
+                proc2 = launch_train(extra + ["--mesh", "4"], d_int,
+                                     devices=4)
+                out2, err2 = proc2.communicate(timeout=300)
+                assert proc2.returncode == 0, (method, err2[-2000:])
+                assert f"done at step {STEPS}" in out2, (method, out2)
+
+                ref = launch_train(extra, d_ref, devices=8)
+                out_r, err_r = ref.communicate(timeout=300)
+                assert ref.returncode == 0, (method, err_r[-2000:])
+
+                a = _load_ckpt_arrays(d_int, STEPS)
+                b = _load_ckpt_arrays(d_ref, STEPS)
+                assert sorted(a) == sorted(b), method
+                assert any(k.startswith("err/") for k in a), method
+                assert any(k.startswith("opt/") for k in a), method
+                for k in a:
+                    assert a[k].dtype == b[k].dtype, (method, k)
+                    assert np.array_equal(a[k], b[k]), \
+                        f"{method}: {k} diverged after fsdp resume"
+
+
 class TestPayloadAccounting:
     def test_metrics_match_payload_bytes_and_hlo(self):
         """(c) — the per-step metric equals
@@ -306,33 +362,37 @@ class TestErrorStateRoundTrip:
         data = SyntheticSequences(SeqDataConfig(n_users=40, n_items=30,
                                                 seq_len=8))
 
-        def run(mesh_n, steps, td, method):
+        def run(mesh_n, steps, td, method, fsdp=False):
             tr = Trainer(SeqRecModel(cfg), OptConfig(lr=1e-2),
                          TrainConfig(steps=steps, batch_size=32,
                                      ckpt_dir=td, ckpt_every=3,
                                      log_every=1, eval_every=0,
                                      grad_compression=method,
-                                     grad_accum_shards=8),
+                                     grad_accum_shards=8, fsdp=fsdp),
                          data_fn=lambda s: data.train_batch(s, 32),
                          mesh=make_host_mesh(mesh_n))
             params, _ = tr.run()
             return tr, params
 
-        for method in ("int8", "bf16"):
-            dA, dB = tempfile.mkdtemp(), tempfile.mkdtemp()
-            _, pA = run(8, 6, dA, method)           # uninterrupted
-            trB, _ = run(8, 3, dB, method)          # first half on 8
-            errB = jax.tree.leaves(trB.err_state)
-            assert any(np.abs(np.asarray(e)).max() > 0 for e in errB)
-            _, pB = run(4, 6, dB, method)           # resume on 4
-            va = [np.asarray(p.value) for p in jax.tree.leaves(
-                pA, is_leaf=lambda x: hasattr(x, "value"))]
-            vb = [np.asarray(p.value) for p in jax.tree.leaves(
-                pB, is_leaf=lambda x: hasattr(x, "value"))]
-            assert all(np.array_equal(a, b) for a, b in zip(va, vb)), \
-                method
-            assert latest_step(dB) == 6
-            shutil.rmtree(dA); shutil.rmtree(dB)
+        # fsdp=True re-lays row-sharded params/moments/err across the
+        # re-mesh (n_items=30 -> 32-row tables, divisible by V=8)
+        for fsdp in (False, True):
+            for method in ("int8", "bf16"):
+                dA, dB = tempfile.mkdtemp(), tempfile.mkdtemp()
+                _, pA = run(8, 6, dA, method, fsdp)  # uninterrupted
+                trB, _ = run(8, 3, dB, method, fsdp) # first half on 8
+                errB = jax.tree.leaves(trB.err_state)
+                assert any(np.abs(np.asarray(e)).max() > 0
+                           for e in errB)
+                _, pB = run(4, 6, dB, method, fsdp)  # resume on 4
+                va = [np.asarray(p.value) for p in jax.tree.leaves(
+                    pA, is_leaf=lambda x: hasattr(x, "value"))]
+                vb = [np.asarray(p.value) for p in jax.tree.leaves(
+                    pB, is_leaf=lambda x: hasattr(x, "value"))]
+                assert all(np.array_equal(a, b)
+                           for a, b in zip(va, vb)), (method, fsdp)
+                assert latest_step(dB) == 6
+                shutil.rmtree(dA); shutil.rmtree(dB)
         print("OK")
         """
-        assert "OK" in run_subprocess(body)
+        assert "OK" in run_subprocess(body, timeout=800)

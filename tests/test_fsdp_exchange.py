@@ -1,0 +1,294 @@
+"""FSDP-composed elastic exchange conformance suite.
+
+Pins the contracts of the sharded-state variant of the elastic
+compressed-gradient exchange (docs/sharding.md §FSDP-composed
+exchange):
+
+  (a) layout: ``fsdp_leaf_sharded`` / ``fsdp_partition_specs`` shard
+      exactly the V-row-divisible float leaves over the data axes and
+      replicate everything else, independent of mesh size;
+  (b) parity: the fsdp step produces the same grads/err/loss as the
+      replicated dp step (allclose — the bracketing differs), and the
+      fsdp step itself is *bitwise identical* across 8/4/2/1-device
+      meshes for every method, the elasticity contract PR'd for the
+      dp path extended under sharding;
+  (c) wire: the compiled fsdp collect round ships one all-to-all of
+      at most ``payload_bytes(values, method)`` (per device per
+      round, modulo the CPU backend's bf16->f32 normalisation) and
+      contains NO V-stack payload all-gather, while the dp collect
+      ships ~``V x payload_bytes``; the one full-param all-gather per
+      step lives in the separate gather module;
+  (d) accounting: ``payload_bytes`` charges the *wire* dtype — 4
+      bytes/element for method "none" even when the parameters are
+      bf16 (the body casts to f32 before shipping);
+  (e) overlap: the host round loop double-buffers dispatch — round
+      r+1 is issued before round r's payloads are consumed.
+
+Multi-device tests run in subprocesses so XLA_FLAGS lands before jax
+initialises (same harness as tests/test_elastic_train.py).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_elastic_train import run_subprocess
+
+from repro.dist import compression
+
+
+# ------------------------------------------------------ (a) + (d): units
+
+class TestFsdpLayoutUnits:
+    def test_leaf_sharding_rule(self):
+        V = 8
+        assert compression.fsdp_leaf_sharded(jnp.zeros((16, 4)), V)
+        assert compression.fsdp_leaf_sharded(jnp.zeros((8,)), V)
+        # leading dim not divisible by V -> replicated
+        assert not compression.fsdp_leaf_sharded(jnp.zeros((12, 4)), V)
+        assert not compression.fsdp_leaf_sharded(jnp.zeros((3,)), V)
+        # non-float (frozen codes), scalars, empties -> replicated
+        assert not compression.fsdp_leaf_sharded(
+            jnp.zeros((16,), jnp.int32), V)
+        assert not compression.fsdp_leaf_sharded(jnp.zeros(()), V)
+        assert not compression.fsdp_leaf_sharded(jnp.zeros((0, 8)), V)
+
+    def test_partition_specs_tree(self):
+        from jax.sharding import PartitionSpec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        vals = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((3,)),
+                "codes": jnp.zeros((16,), jnp.int32)}
+        specs = compression.fsdp_partition_specs(vals, mesh, 8)
+        assert specs["w"] == PartitionSpec("data")
+        assert specs["b"] == PartitionSpec()
+        assert specs["codes"] == PartitionSpec()
+
+    def test_sharding_rule_is_mesh_size_independent(self):
+        """Classification depends only on (leaf, V) — never on the
+        device count — so elastic restarts re-lay the same leaves."""
+        vals = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((3,))}
+        ref = {k: compression.fsdp_leaf_sharded(v, 8)
+               for k, v in vals.items()}
+        assert ref == {"w": True, "b": False}
+        # the helper takes no mesh at all: the property holds trivially,
+        # this pins the signature so a refactor can't sneak one in
+        import inspect
+        sig = inspect.signature(compression.fsdp_leaf_sharded)
+        assert list(sig.parameters) == ["v", "n_shards"]
+
+    def test_payload_bytes_charges_wire_dtype(self):
+        """(d) — bf16 parameters still ship f32 under method "none"
+        (the body upcasts before the exchange), bf16 under "bf16",
+        int8 under "int8"; non-floats never ship."""
+        vals = {"w": jnp.zeros((16, 4), jnp.bfloat16),
+                "b": jnp.zeros((3,), jnp.float32),
+                "codes": jnp.zeros((5,), jnp.int32)}
+        n = 16 * 4 + 3
+        assert compression.payload_bytes(vals, "none") == n * 4
+        assert compression.payload_bytes(vals, "bf16") == n * 2
+        assert compression.payload_bytes(vals, "int8") == n * 1
+
+    def test_fsdp_shardings_roundtrip_single_device(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        vals = {"w": jnp.arange(64, dtype=jnp.float32).reshape(16, 4),
+                "b": jnp.arange(3, dtype=jnp.float32)}
+        shs = compression.fsdp_shardings(vals, mesh, 8)
+        put = jax.device_put(vals, shs)
+        np.testing.assert_array_equal(np.asarray(put["w"]),
+                                      np.asarray(vals["w"]))
+        np.testing.assert_array_equal(np.asarray(put["b"]),
+                                      np.asarray(vals["b"]))
+
+
+# --------------------------------------- (b): parity + bitwise elasticity
+
+_PARITY_BODY = """
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.dist import compression as C
+from repro.launch.mesh import make_host_mesh
+
+V = 8
+np.random.seed(0)
+values = {"w": jnp.asarray(np.random.randn(16, 4), jnp.float32),
+          "b": jnp.asarray(np.random.randn(3), jnp.float32),
+          "codes": jnp.arange(5, dtype=jnp.int32)}
+batch = {"x": jnp.asarray(np.random.randn(32, 16), jnp.float32),
+         "y": jnp.asarray(np.random.randn(32, 4), jnp.float32)}
+
+def loss_fn(vals, bt):
+    pred = bt["x"] @ vals["w"] + vals["b"][:1]
+    return jnp.mean((pred - bt["y"]) ** 2)
+
+def run(nd, method, fsdp):
+    mesh = make_host_mesh(nd)
+    fn = C.make_dp_grad_fn(loss_fn, mesh, method, accum_shards=V,
+                           fsdp=fsdp)
+    vals = values
+    if fsdp:
+        vals = jax.device_put(values, C.fsdp_shardings(values, mesh, V))
+    err = C.zeros_error_state(values, V)
+    g, e, loss = fn(vals, err, batch)
+    return jax.device_get(g), jax.device_get(e), float(loss)
+
+for method in ("none", "bf16", "int8"):
+    ref_g, ref_e, ref_l = run(8, method, fsdp=False)
+    g8, e8, l8 = run(8, method, fsdp=True)
+    # dp parity: same numbers up to bracketing (fsdp reduces each
+    # owned slice with an unrolled chain, dp with jnp.mean)
+    for k in ("w", "b"):
+        assert g8[k].shape == ref_g[k].shape, (method, k)
+        np.testing.assert_allclose(g8[k], ref_g[k], rtol=2e-6,
+                                   atol=2e-6)
+        np.testing.assert_array_equal(e8[k], ref_e[k])
+    # elasticity: the fsdp path is bitwise mesh-size-independent
+    for nd in (4, 2, 1):
+        g, e, l = run(nd, method, fsdp=True)
+        for k in ("w", "b", "codes"):
+            np.testing.assert_array_equal(g[k], g8[k]), (method, nd, k)
+        np.testing.assert_array_equal(e["w"], e8["w"])
+        np.testing.assert_array_equal(e["b"], e8["b"])
+        assert l == l8, (method, nd, l, l8)
+print("PASS")
+"""
+
+
+class TestFsdpParityAndElasticity:
+    def test_fsdp_matches_dp_and_is_bitwise_across_meshes(self):
+        assert "PASS" in run_subprocess(_PARITY_BODY)
+
+
+# ----------------------------------------------------- (c): wire bytes
+
+_WIRE_BODY = """
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.dist import compression as C
+from repro.dist.hlo import collective_bytes
+from repro.launch.mesh import make_host_mesh
+
+V, D = 8, 8
+values = {"w": jnp.zeros((1024, 32), jnp.float32),
+          "b": jnp.zeros((3,), jnp.float32),
+          "codes": jnp.zeros((7,), jnp.int32)}
+batch = {"x": jnp.zeros((16, 1024), jnp.float32),
+         "y": jnp.zeros((16, 32), jnp.float32)}
+
+def loss_fn(vals, bt):
+    pred = bt["x"] @ vals["w"] + vals["b"][:1]
+    return jnp.mean((pred - bt["y"]) ** 2)
+
+mesh = make_host_mesh(D)
+out = {}
+for method in C.METHODS:
+    rec = {"payload": C.payload_bytes(values, method)}
+    for fsdp in (False, True):
+        fn = C.make_dp_grad_fn(loss_fn, mesh, method, accum_shards=V,
+                               fsdp=fsdp)
+        vals = (jax.device_put(values, C.fsdp_shardings(values, mesh, V))
+                if fsdp else values)
+        err = C.zeros_error_state(values, V)
+        e_r = jax.tree.map(lambda x: x[np.arange(D)], err)
+        b_r = jax.tree.map(
+            lambda x: x.reshape((V, x.shape[0] // V) + x.shape[1:]),
+            batch)
+        vals_full = fn.gather(vals) if fsdp else vals
+        hlo = fn.collect.lower(vals_full, e_r, b_r, None,
+                               jnp.int32(0)).compile().as_text()
+        res = collective_bytes(hlo)
+        key = "fsdp" if fsdp else "dp"
+        rec[key + "_ag"] = res["per_op_bytes"].get("all-gather", 0)
+        rec[key + "_a2a"] = res["per_op_bytes"].get("all-to-all", 0)
+        if fsdp:
+            g = collective_bytes(
+                fn.gather.lower(vals).compile().as_text())
+            rec["gather_ag"] = g["per_op_bytes"].get("all-gather", 0)
+    out[method] = rec
+print(json.dumps(out))
+"""
+
+
+class TestFsdpWireBytes:
+    def test_scatter_round_le_payload_no_vstack_allgather(self):
+        res = json.loads(
+            run_subprocess(_WIRE_BODY).strip().splitlines()[-1])
+        V = 8
+        # the XLA CPU backend normalises bf16 collectives to f32 on
+        # the wire (2x); int8 stays s8, f32 stays f32 — same caveat
+        # test_elastic_train.py::TestPayloadAccounting documents
+        wire_factor = {"none": 1, "bf16": 2, "int8": 1}
+        param_bytes = (1024 * 32 + 3) * 4
+        for method, r in res.items():
+            wf = wire_factor[method]
+            # dp ships the whole V-stack: ~V x payload of all-gather
+            assert r["dp_ag"] >= V * r["payload"] * wf * 0.95, \
+                (method, r)
+            assert r["dp_a2a"] == 0, (method, r)
+            # fsdp round: ONE payload on the wire, as an all-to-all —
+            # the acceptance bound, <= payload_bytes per device per
+            # round (wire-normalised)
+            assert 0 < r["fsdp_a2a"] <= r["payload"] * wf, (method, r)
+            # and the collect module carries no V-stack payload
+            # all-gather any more; the small residual all-gathers are
+            # scalars (loss row, int8 scales) far below one payload
+            assert r["fsdp_ag"] < r["payload"], (method, r)
+            # the per-step param all-gather lives in gather, once,
+            # costing the raw param bytes — not V x payload
+            assert r["gather_ag"] <= param_bytes * wf, (method, r)
+            # headline: the round's wire cost dropped ~V x
+            assert r["fsdp_a2a"] * (V - 1) < r["dp_ag"], (method, r)
+
+
+# ------------------------------------------------------- (e): overlap
+
+_OVERLAP_BODY = """
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.dist import compression as C
+from repro.launch.mesh import make_host_mesh
+
+V = 8
+values = {"w": jnp.zeros((16, 4), jnp.float32)}
+batch = {"x": jnp.zeros((32, 16), jnp.float32),
+         "y": jnp.zeros((32, 4), jnp.float32)}
+
+def loss_fn(vals, bt):
+    return jnp.mean((bt["x"] @ vals["w"] - bt["y"]) ** 2)
+
+mesh = make_host_mesh(4)
+out = {}
+for overlap in (True, False):
+    fn = C.make_dp_grad_fn(loss_fn, mesh, "none", accum_shards=V,
+                           fsdp=True, overlap=overlap)
+    vals = jax.device_put(values, C.fsdp_shardings(values, mesh, V))
+    err = C.zeros_error_state(values, V)
+    g, e, loss = fn(vals, err, batch)
+    out[str(overlap)] = {"sched": [list(s) for s in fn.last_schedule],
+                         "loss": float(loss),
+                         "g": np.asarray(g["w"]).tolist()}
+print(json.dumps(out))
+"""
+
+
+class TestOverlapSchedule:
+    def test_round_r_plus_1_issued_before_r_consumed(self):
+        res = json.loads(
+            run_subprocess(_OVERLAP_BODY, devices=4)
+            .strip().splitlines()[-1])
+        ov = [tuple(s) for s in res["True"]["sched"]]
+        seq = [tuple(s) for s in res["False"]["sched"]]
+        L = 2                                        # V=8 on 4 devices
+        issues = [r for op, r in ov if op == "issue"]
+        consumes = [r for op, r in ov if op == "consume"]
+        assert issues == list(range(L)) and consumes == list(range(L))
+        for r in range(L - 1):
+            # double buffering: issue(r+1) strictly before consume(r)
+            assert ov.index(("issue", r + 1)) < \
+                ov.index(("consume", r)), ov
+        # the sequential loop never runs ahead
+        for r in range(L - 1):
+            assert seq.index(("consume", r)) < \
+                seq.index(("issue", r + 1)), seq
+        # overlap is a scheduling change only — identical numbers
+        assert res["True"]["loss"] == res["False"]["loss"]
+        assert res["True"]["g"] == res["False"]["g"]

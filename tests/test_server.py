@@ -167,6 +167,27 @@ class TestMicroBatchQueue:
         assert np.all(h[2:] == 0)                   # dummy rows all-pad
         assert b.occupancy == 0.5
 
+    def test_explicit_nonnegative_rid_rejected(self):
+        """The internal counter owns the non-negative id space; an
+        explicit rid landing in it collides with a queued or future
+        request — duplicate rows merge in the metrics' completion map
+        and the duplicate counter lies.  Caller-owned ids live in the
+        negative namespace (the warm-up path's Request(-1, ...)
+        convention)."""
+        clk = VirtualClock()
+        q = self._q(clk)
+        first = q.submit([1, 2])
+        assert first == 0                       # counter-assigned
+        with pytest.raises(ValueError, match="negative"):
+            q.submit([1, 2], rid=0)             # collides with `first`
+        with pytest.raises(ValueError, match="negative"):
+            q.submit([1, 2], rid=7)             # future counter value
+        # the rejects must not have consumed counter ids or enqueued
+        assert q.submit([3, 4]) == 1
+        assert q.depth() == 2
+        # negative (caller-namespace) ids pass through untouched
+        assert q.submit([5, 6], rid=-3) == -3
+
     def test_overlong_history_keeps_recent_tail(self):
         b = Batch([Request(0, np.arange(1, 11))], bucket_len=4,
                   max_batch=2)
@@ -220,6 +241,46 @@ class TestMetrics:
 
     def test_empty_snapshot_valid(self):
         assert validate_snapshot(ServerMetrics().snapshot()) == []
+
+    def test_inflight_requests_are_pending_not_dropped(self):
+        """A mid-run snapshot with queued work must report the backlog
+        as ``requests_pending`` — ``requests_dropped`` used to be
+        computed as submitted - completed, so any in-flight request
+        showed up as dropped on a live dashboard."""
+        m = ServerMetrics("queue")
+        for rid in range(6):
+            m.record_submit(rid)
+        for rid in range(2):
+            m.record_complete(rid, 0.001)
+        snap = m.snapshot()
+        assert validate_snapshot(snap) == []
+        assert snap["requests_pending"] == 4
+        assert snap["requests_dropped"] == 0        # nothing dropped
+        # draining the backlog empties pending
+        for rid in range(2, 6):
+            m.record_complete(rid, 0.001)
+        snap = m.snapshot()
+        assert snap["requests_pending"] == 0
+        assert snap["requests_completed"] == 6
+
+    def test_dropped_means_explicitly_dropped(self):
+        m = ServerMetrics("queue")
+        for rid in range(5):
+            m.record_submit(rid)
+        m.record_complete(0, 0.001)
+        m.record_drop(3)
+        m.record_drop(4)
+        snap = m.snapshot()
+        assert validate_snapshot(snap) == []
+        assert snap["requests_dropped"] == 2
+        assert snap["requests_pending"] == 2        # 1, 2 still queued
+        assert snap["requests_completed"] == 1
+
+    def test_pending_is_schema_required(self):
+        snap = self._filled().snapshot()
+        del snap["requests_pending"]
+        assert any("requests_pending" in e
+                   for e in validate_snapshot(snap))
 
     def test_schema_covers_required_surface(self):
         for k in ("latency_ms", "queue_depth", "skip_fraction",

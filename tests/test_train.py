@@ -272,6 +272,67 @@ class TestData:
                 | (b2["labels"][..., None] == 0)).all()
 
 
+class TestOptimizerWeightDecay:
+    """weight_decay must apply (decoupled) for EVERY optimizer kind —
+    sgd and adam silently ignored it, so sweeps setting it trained
+    undecayed while reporting the decayed config."""
+
+    def _step(self, kind, wd, p0=2.0, g0=0.5, lr=0.1):
+        from repro.train.optimizer import apply_updates, init_opt_state
+        cfg = OptConfig(kind=kind, lr=lr, weight_decay=wd,
+                        clip_norm=None)
+        values = {"w": jnp.full((3,), p0, jnp.float32)}
+        grads = {"w": jnp.full((3,), g0, jnp.float32)}
+        new_v, new_s, _ = apply_updates(cfg, init_opt_state(values),
+                                        values, grads)
+        return float(np.asarray(new_v["w"])[0]), new_s
+
+    def test_sgd_hand_computed(self):
+        lr, wd, p0, g0 = 0.1, 0.01, 2.0, 0.5
+        got, _ = self._step("sgd", wd, p0, g0, lr)
+        assert got == pytest.approx(p0 - lr * (g0 + wd * p0), abs=1e-7)
+        got0, _ = self._step("sgd", 0.0, p0, g0, lr)
+        assert got0 == pytest.approx(p0 - lr * g0, abs=1e-7)
+        assert got < got0                   # decay really pulled down
+
+    def _adam_update(self, g0, b1=0.9, b2=0.999, eps=1e-8):
+        # first step: m=(1-b1)g, v=(1-b2)g^2, both bias-corrected -> g
+        m_hat = (1 - b1) * g0 / (1 - b1)
+        v_hat = (1 - b2) * g0 ** 2 / (1 - b2)
+        return m_hat / (np.sqrt(v_hat) + eps)
+
+    def test_adam_hand_computed(self):
+        lr, wd, p0, g0 = 0.1, 0.01, 2.0, 0.5
+        upd = self._adam_update(g0)
+        got, state = self._step("adam", wd, p0, g0, lr)
+        assert got == pytest.approx(p0 - lr * (upd + wd * p0), rel=1e-6)
+        # moments really accumulated (adam != sgd internally)
+        assert float(np.asarray(state["m"]["w"])[0]) == \
+            pytest.approx(0.1 * g0, rel=1e-5)
+
+    def test_adamw_hand_computed_and_unchanged(self):
+        lr, wd, p0, g0 = 0.1, 0.01, 2.0, 0.5
+        upd = self._adam_update(g0)
+        got, _ = self._step("adamw", wd, p0, g0, lr)
+        assert got == pytest.approx(p0 - lr * (upd + wd * p0), rel=1e-6)
+
+    def test_decay_is_decoupled_from_clip(self):
+        """The decay term scales with lr but NOT with the grad-clip
+        scale — clipping a huge gradient must not also shrink the
+        decay (the decoupled formulation)."""
+        from repro.train.optimizer import apply_updates, init_opt_state
+        p0, wd, lr = 2.0, 0.1, 0.1
+        values = {"w": jnp.full((1,), p0, jnp.float32)}
+        grads = {"w": jnp.full((1,), 1e4, jnp.float32)}   # clipped hard
+        cfg = OptConfig(kind="sgd", lr=lr, weight_decay=wd,
+                        clip_norm=1.0)
+        new_v, _, stats = apply_updates(cfg, init_opt_state(values),
+                                        values, grads)
+        clipped_g = 1.0                     # norm-1 after clipping
+        assert float(np.asarray(new_v["w"])[0]) == pytest.approx(
+            p0 - lr * (clipped_g + wd * p0), rel=1e-5)
+
+
 class TestTrainerIntegration:
     def test_preemption_saves_and_resumes(self):
         cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
@@ -398,6 +459,80 @@ class TestTrainerIntegration:
         with pytest.raises(ValueError, match="unknown"):
             Trainer(SeqRecModel(cfg), OptConfig(),
                     TrainConfig(grad_compression="fp4"), data_fn=None)
+
+    def test_early_stop_state_survives_preempt_resume(self):
+        """Early-stop best/stale must checkpoint next to "opt": a
+        resumed run that re-armed the full patience window trained past
+        where the uninterrupted run stopped, breaking run-equivalence.
+        Eval lands on odd steps (eval_every=2) and the preemption on an
+        even one, so both runs see the identical metric sequence."""
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        data = SyntheticSequences(SeqDataConfig(n_users=40, n_items=30,
+                                                seq_len=8))
+        # step -> metric: peak at the first eval, then decline; with
+        # patience=2 the run must stop after the step-5 eval (stale=2)
+        metric_by_step = {1: 0.9, 3: 0.8, 5: 0.7, 7: 0.6, 9: 0.5}
+
+        def make_run(td, preempt_at=None):
+            box = {}
+
+            def data_fn(s):
+                box["step"] = s
+                if preempt_at is not None and s == preempt_at:
+                    box["tr"]._preempted = True
+                return data.train_batch(s, 8)
+
+            def eval_fn(params):
+                return {"metric": metric_by_step[box["step"]]}
+
+            tr = Trainer(SeqRecModel(cfg), OptConfig(lr=1e-2),
+                         TrainConfig(steps=20, batch_size=8,
+                                     ckpt_dir=td, ckpt_every=0,
+                                     log_every=100, eval_every=2,
+                                     early_stop_patience=2),
+                         data_fn=data_fn, eval_fn=eval_fn)
+            box["tr"] = tr
+            return tr
+
+        with tempfile.TemporaryDirectory() as d_ref, \
+                tempfile.TemporaryDirectory() as d_int:
+            ref = make_run(d_ref)
+            p_ref, _ = ref.run()
+            assert ref.done_step == 6          # stopped by patience
+
+            intr = make_run(d_int, preempt_at=2)
+            intr.run()
+            assert intr.done_step == 3         # really preempted
+            res = make_run(d_int)
+            p_res, _ = res.run()
+            # same stopping step as the uninterrupted run — the best
+            # metric (0.9, seen before the preemption) must have been
+            # restored, not re-armed to -inf
+            assert res.done_step == ref.done_step
+            va = [np.asarray(p.value) for p in jax.tree.leaves(
+                p_ref, is_leaf=lambda x: hasattr(x, "value"))]
+            vb = [np.asarray(p.value) for p in jax.tree.leaves(
+                p_res, is_leaf=lambda x: hasattr(x, "value"))]
+            assert all(np.array_equal(a, b) for a, b in zip(va, vb))
+
+    def test_step_times_reset_between_runs(self):
+        """The slow-step watchdog's per-step samples must not leak
+        from a previous run() on the same Trainer — a second run's
+        medians would be computed against a stale mesh/compile
+        baseline."""
+        cfg = SeqRecConfig(arch="gru4rec", n_items=30, max_len=8,
+                           d_model=16, n_layers=1)
+        data = SyntheticSequences(SeqDataConfig(n_users=40, n_items=30,
+                                                seq_len=8))
+        tr = Trainer(SeqRecModel(cfg), OptConfig(lr=1e-2),
+                     TrainConfig(steps=5, batch_size=8, log_every=100,
+                                 eval_every=0),
+                     data_fn=lambda s: data.train_batch(s, 8))
+        tr.run()
+        assert len(tr._step_times) == 5
+        tr.run()
+        assert len(tr._step_times) == 5        # reset, not 10
 
     def test_microbatch_grad_accumulation_matches(self):
         """2 microbatches ~= full batch (same data, mean loss)."""
