@@ -376,6 +376,7 @@ def serve_latency(fast: bool = True):
     the conformance contract (tests/test_server.py), so the derived
     column is purely a latency/occupancy story."""
     from repro.configs import get_bundle
+    from repro.core.engine import RetrievalSpec
     from repro.core.serve import ThresholdState
     from repro.serve import (CatalogueRegistry, Replica, ReplicaPool,
                              Request, RetrievalServer, ServerMetrics,
@@ -387,6 +388,7 @@ def serve_latency(fast: bool = True):
         ((120, 600.0) if fast else (600, 1000.0))
     model, _, rng = get_bundle("two-tower-retrieval-jpq").make_smoke()
     params = model.init_params(rng)
+    spec = RetrievalSpec(kind=model.emb.cfg.kind, k=10)
     codes = params["item_emb"]["codes"].value
     hist_len = int(model.cfg.hist_len)
     buckets = tuple(sorted({max(1, hist_len // 2), hist_len}))
@@ -405,7 +407,8 @@ def serve_latency(fast: bool = True):
         pool = ReplicaPool(
             [Replica(model, params, k=10,
                      warm=ThresholdState(0.9) if c["warm"] else None,
-                     name=f"r{i}") for i in range(c["replicas"])],
+                     name=f"r{i}", spec=spec)
+             for i in range(c["replicas"])],
             merge_every=2 if c["warm"] else 0)
         live = registry.live()
         for rep in pool.replicas:          # compile outside the window

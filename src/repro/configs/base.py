@@ -82,14 +82,30 @@ def train_step_builder(model):
 def serve_builder(method: str):
     """Builder for serve cells.  The returned builder accepts optional
     keyword arguments (e.g. ``fused=False`` / ``prune=True`` from
-    launch/dryrun.py's --serve flags) and forwards the subset the serve
-    method actually supports — bulk paths without a fused/pruned
-    variant just ignore them."""
+    launch/dryrun.py's --serve flags).  Retrieval methods resolve them
+    to a ``core.engine.RetrievalSpec`` once and serve through the
+    model's bound engine; bulk/scoring paths without a fused/pruned
+    variant keep the signature-filtered forward and just ignore them."""
     def builder(model, **kw):
-        import inspect
-
         from repro.nn import module as nn
 
+        if method == "retrieve" and hasattr(model, "bind_engine"):
+            from repro.core import engine as _engine
+            spec = _engine.spec_for(model.emb, k=kw.get("top_k", 100),
+                                    fused=kw.get("fused", True),
+                                    prune=kw.get("prune"))
+
+            def fn(values, batch):
+                params = nn.with_values(model._params_meta, values)
+                bound = model.bind_engine(params, spec)
+                if spec.prune:
+                    # dry-run cells are single-trace: the inline
+                    # PruneState build is part of the lowered program
+                    bound.engine.bind_catalogue(prune=True)
+                return bound.retrieve(batch)
+            return fn
+
+        import inspect
         bound = getattr(model, method)
         accepted = set(inspect.signature(bound).parameters)
         kw = {k: v for k, v in kw.items() if k in accepted}

@@ -3,10 +3,17 @@
 Public surface:
   EmbeddingConfig / make_embedding  - factory over {full, jpq, qr}
   build_codebook                    - centroid assignment strategies
-  retrieve_topk                     - fused serve-path top-k (core.serve)
+  retrieve_topk                     - compat shim over the engine (core.serve)
+  RetrievalSpec / RetrievalEngine   - declarative serve path (core.engine)
   jpq / full / qr submodules        - the three embedding implementations
 """
 from repro.core.api import EmbeddingConfig, Embedding, make_embedding  # noqa: F401
 from repro.core.assign import (build_codebook,  # noqa: F401
                                popularity_permutation, shard_sweep_ids)
 from repro.core.serve import ThresholdState, retrieve_topk  # noqa: F401
+# engine last: it imports core.sharded / core.jpq, which the modules
+# above must already have resolved
+from repro.core.engine import (RetrievalSpec, RetrievalEngine,  # noqa: F401
+                               BoundRetrieval, JitCache, register_scorer,
+                               unregister_scorer, spec_for, spec_from_args,
+                               add_spec_args)

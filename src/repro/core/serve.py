@@ -121,25 +121,20 @@ def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
     -> (values, ids) [..., min(k, n_items)] over the whole catalogue
     (+ a pruning-stats dict — skip counts and the final per-query
     threshold ``theta`` a ``ThresholdState`` EMAs — when
-    ``return_stats``, pruned JPQ path only)."""
-    lead = h.shape[:-1]
-    B = 1
-    for s in lead:
-        B *= s
-    if fused and emb.cfg.kind == "jpq":
-        part = _jpq.partial_scores(p, h)                 # [..., m, b]
-        part2 = part.reshape(B, *part.shape[len(lead):])
-        out = sharded.fused_topk_over_codes(
-            part2, p["codes"].value, k, block_n=block_n, backend=backend,
-            prune=prune, perm=perm, warm=warm, return_stats=return_stats)
-        if return_stats:
-            v, i, stats = out
-            return v.reshape(*lead, -1), i.reshape(*lead, -1), stats
-        v, i = out
-    else:
-        assert warm is None and not return_stats, \
-            "warm floors / stats are pruned-JPQ-fused-path features"
-        scores = emb.logits(p, h.reshape(B, -1))         # [B, N]
-        scores = dist.constrain(scores, ("batch", "items"))
-        v, i = sharded.topk_over_items(scores, int(k))
-    return v.reshape(*lead, -1), i.reshape(*lead, -1)
+    ``return_stats``, pruned JPQ path only).
+
+    Compatibility shim: the kwargs are normalised into a
+    ``core.engine.RetrievalSpec`` and dispatched through a one-shot
+    ``RetrievalEngine`` — the strategy ladder that used to live here is
+    now the engine's scorer registry (docs/engine.md).  Unsupported
+    knob combinations raise ``ValueError`` from the spec / strategy
+    (they used to be bare asserts, stripped under ``python -O``).
+    """
+    from repro.core import engine as _engine
+    spec = _engine.spec_for(emb, k=k, fused=fused, block_n=block_n,
+                            backend=backend, prune=prune, perm=perm,
+                            stats=return_stats)
+    eng = _engine.RetrievalEngine(spec, emb, p)
+    if spec.prune:
+        eng.bind_catalogue(prune=prune, perm=perm)
+    return eng.retrieve(h, floor=warm)

@@ -169,6 +169,13 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
     B = partial.shape[0]
     N = codes.shape[0]
     k_out = min(int(k), N)
+    if not prune and (warm is not None or return_stats):
+        raise ValueError(
+            "warm floors / stats are pruned-path features: the warm "
+            "floor seeds the pruning threshold and the stats dict "
+            "counts skipped tiles, neither of which exists on the "
+            "unpruned sweep — pass prune=True (or a prepare_pruning(...) "
+            "state), or drop warm=/return_stats=")
     if (mesh is None or "model" not in mesh.shape
             or N % mesh.shape["model"] != 0):
         return _tops.jpq_topk_lut(partial, codes, k_out, block_n=block_n,
@@ -181,9 +188,6 @@ def fused_topk_over_codes(partial, codes, k: int, *, block_n: int | None = None,
     out_spec = _rules.resolve_axes(("batch", None), (B, k_out), mesh)
 
     if not prune:
-        assert warm is None and not return_stats, \
-            "warm floors / stats are pruned-path features"
-
         def body(part_l, codes_l):           # [b, m, b_c], [N/shards, m]
             v, i = _tops.jpq_topk_lut(part_l, codes_l, k_loc,
                                       block_n=block_n, backend=backend)

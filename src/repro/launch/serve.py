@@ -25,11 +25,29 @@ aggregated across ALL shards (mean weighted by local tile count, the
 ``fused_topk_over_codes`` stats contract) — not shard 0's.
 """
 import argparse
-import inspect
 import os
+import sys
 import time
 
 import numpy as np
+
+
+def _set_mesh_env(argv) -> None:
+    """Set the host-device-count XLA flag from a raw ``--mesh`` argv
+    peek BEFORE anything imports jax (``build_parser`` pulls in
+    ``repro.core.engine``; the flag must be in place first)."""
+    mesh = 0
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            mesh = int(argv[i + 1])
+        elif a.startswith("--mesh="):
+            mesh = int(a.split("=", 1)[1])
+    if mesh > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={mesh}"
+        ).strip()
 
 
 def make_requests(template, batch_size: int, n_requests: int, seed: int,
@@ -87,41 +105,29 @@ def _template_popularity(template, n_rows: int) -> np.ndarray:
     return counts
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """Batch-loop CLI: the retrieval flag cluster is the SHARED
+    ``core.engine.add_spec_args`` set (identical flags to
+    ``repro.launch.server``; identical flags resolve to identical
+    specs via ``spec_from_args``)."""
+    from repro.core import engine as engine_mod
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="two-tower-retrieval-jpq")
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--top-k", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="fused PQTopK serve path for retrieval archs "
-                         "(--no-fused: materialise-then-top-k reference)")
-    ap.add_argument("--prune", action=argparse.BooleanOptionalAction,
-                    default=False,
-                    help="score-bound dynamic pruning of code tiles on "
-                         "the fused path (bit-exact; docs/serving.md)")
-    ap.add_argument("--perm", action=argparse.BooleanOptionalAction,
-                    default=False,
-                    help="popularity-permuted pruned sweep (implies the "
-                         "permute-then-shard layout under --mesh)")
-    ap.add_argument("--warm-theta", nargs="?", const=0.9, default=None,
-                    type=float, metavar="DECAY",
-                    help="EMA warm-start of the pruning threshold "
-                         "(core.serve.ThresholdState; default decay 0.9)")
+    engine_mod.add_spec_args(ap)
     ap.add_argument("--mesh", type=int, default=0,
                     help="model-shard the catalogue S ways over host "
                          "devices (0 = no mesh)")
     ap.add_argument("--ckpt-dir", default=None)
-    args = ap.parse_args()
+    return ap
 
-    if args.mesh > 1 and "xla_force_host_platform_device_count" not in \
-            os.environ.get("XLA_FLAGS", ""):
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.mesh}"
-        ).strip()
+
+def main():
+    _set_mesh_env(sys.argv[1:])
+    args = build_parser().parse_args()
 
     import contextlib
 
@@ -129,6 +135,7 @@ def main():
     import jax.numpy as jnp
     from repro import dist
     from repro.configs import get_bundle
+    from repro.core import engine as engine_mod
     from repro.core import serve as serve_mod
     from repro.nn import module as nn
 
@@ -151,54 +158,51 @@ def main():
                 if k not in ("label", "labels")}
     warm_state = None
     pruned = False
-    if hasattr(model, "retrieve"):
-        kw = {"top_k": args.top_k}
-        sig = inspect.signature(model.retrieve).parameters
-        if "fused" in sig:
-            kw["fused"] = args.fused
-        if "prune" in sig and args.prune:
+    engine_path = hasattr(model, "retrieve") \
+        and hasattr(model, "bind_engine")
+    if engine_path:
+        spec = engine_mod.spec_from_args(args, kind=model.emb.cfg.kind,
+                                         k=args.top_k)
+        state = None
+        if spec.prune and "item_emb" in params:
             # serving protocol (docs/serving.md): the presence mask is
             # codes-only — build the PruneState ONCE here, outside the
             # per-request jit, so the latency loop measures the bound
             # test and not an O(N·m) rebuild per request.  Under a mesh
             # the block size must tile the per-shard rows so the SAME
             # global state row-slices every request (permute-then-shard)
-            kw["prune"] = True
-            emb = getattr(model, "emb", None)
-            if emb is not None and emb.cfg.kind == "jpq" \
-                    and "item_emb" in params:
-                from repro.core.assign import popularity_permutation
-                from repro.kernels.jpq_topk import ops as _tops
-                codes = params["item_emb"]["codes"].value
-                N = codes.shape[0]
-                perm = None
-                if args.perm:
-                    perm = popularity_permutation(
-                        _template_popularity(template, N))
-                bn = _tops.mesh_prune_block_n(N, args.mesh) \
-                    if args.mesh > 1 and N % args.mesh == 0 \
-                    else _tops.prune_block_n(N)
-                kw["prune"] = _tops.prepare_pruning(codes, emb.cfg.b, bn,
-                                                    perm=perm)
-                pruned = args.fused
+            from repro.core.assign import popularity_permutation
+            codes = params["item_emb"]["codes"].value
+            perm = None
+            if spec.perm != "none":
+                perm = popularity_permutation(
+                    _template_popularity(template, codes.shape[0]))
+            state = engine_mod.build_prune_state(
+                codes, model.emb.cfg.b, shards=args.mesh, perm=perm)
+            pruned = True
+        elif spec.prune:
+            import dataclasses
+            spec = dataclasses.replace(spec, prune=False, perm="none",
+                                       warm=None, stats=False)
+        bound = model.bind_engine(params, spec)
         if pruned:
-            kw["return_stats"] = True
-        if pruned and args.warm_theta is not None:
-            warm_state = serve_mod.ThresholdState(args.warm_theta)
-            fn = jax.jit(lambda p, b, w: model.retrieve(p, b, warm=w,
-                                                        **kw))
+            bound.engine.bind_catalogue(prune=state)
+        if pruned and spec.warm is not None:
+            warm_state = serve_mod.ThresholdState(spec.warm)
+            fn = jax.jit(lambda b, w: bound.retrieve(b, floor=w))
         else:
-            fn = jax.jit(lambda p, b: model.retrieve(p, b, **kw))
+            fn = jax.jit(lambda b: bound.retrieve(b))
     else:
         fn = jax.jit(model.serve)
 
     def dispatch(req):
         req = {k: jnp.asarray(v) for k, v in req.items()}
-        if warm_state is not None:
-            out = fn(params, req, jnp.asarray(
-                warm_state.floor(args.batch_size)))
-        else:
+        if not engine_path:
             out = fn(params, req)
+        elif warm_state is not None:
+            out = fn(req, jnp.asarray(warm_state.floor(args.batch_size)))
+        else:
+            out = fn(req)
         jax.block_until_ready(out)
         return out
 
@@ -235,7 +239,7 @@ def main():
             account(out)
     lats = np.asarray(lats)
     mode = ("fused" if args.fused else "materialise") \
-        if hasattr(model, "retrieve") else "serve"
+        if engine_path else "serve"
     # label what actually ran: `pruned` is only set when the arch's
     # embedding is JPQ and the fused path took the PruneState — argv
     # alone would claim pruning for archs that fell through to the

@@ -22,12 +22,19 @@ Compilation is hoisted out of the measured window by warming every
 """
 import argparse
 import json
-import os
 import sys
 import time
 
+from repro.launch.serve import _set_mesh_env
 
-def main():
+
+def build_parser() -> argparse.ArgumentParser:
+    """Request-server CLI: the retrieval flag cluster is the SHARED
+    ``core.engine.add_spec_args`` set (identical flags to
+    ``repro.launch.serve``; identical flags resolve to identical specs
+    via ``spec_from_args`` — only the prune DEFAULT differs: the
+    request server serves pruned unless told otherwise)."""
+    from repro.core import engine as engine_mod
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="two-tower-retrieval-jpq")
     ap.add_argument("--requests", type=int, default=100)
@@ -40,13 +47,7 @@ def main():
                     help="comma-separated history-length buckets "
                          "(default: hist_len/2, hist_len)")
     ap.add_argument("--replicas", type=int, default=1)
-    ap.add_argument("--prune", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="serve with the prebuilt score-bound PruneState")
-    ap.add_argument("--warm", nargs="?", const=0.9, default=None,
-                    type=float, metavar="DECAY",
-                    help="per-replica EMA warm threshold floors "
-                         "(default decay 0.9)")
+    engine_mod.add_spec_args(ap, prune_default=True)
     ap.add_argument("--merge-every", type=int, default=4,
                     help="merge replica warm floors every N batches "
                          "(0 = never)")
@@ -59,14 +60,12 @@ def main():
                     help="CI mode: assert the serving contract and "
                          "exit non-zero on violation")
     ap.add_argument("--p99-budget-ms", type=float, default=2000.0)
-    args = ap.parse_args()
+    return ap
 
-    if args.mesh > 1 and "xla_force_host_platform_device_count" not in \
-            os.environ.get("XLA_FLAGS", ""):
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.mesh}"
-        ).strip()
+
+def main():
+    _set_mesh_env(sys.argv[1:])
+    args = build_parser().parse_args()
 
     import contextlib
 
@@ -74,6 +73,7 @@ def main():
 
     from repro import dist
     from repro.configs import get_bundle
+    from repro.core import engine as engine_mod
     from repro.core.serve import ThresholdState
     from repro.serve import (CatalogueRegistry, MicroBatchQueue,  # noqa: F401
                              Replica, ReplicaPool, Request,
@@ -108,17 +108,36 @@ def main():
     else:
         buckets = tuple(sorted({max(1, hist_len // 2), hist_len}))
 
+    # one spec resolution for the whole server: replicas stamp the
+    # version-dependent fields (prune/perm/warm/stats) per catalogue
+    spec = engine_mod.spec_from_args(args, kind=emb.cfg.kind,
+                                     k=args.top_k)
+
+    hists = list(request_stream(args.requests, n_items=n_items,
+                                max_len=hist_len, reserved=reserved,
+                                seed=args.seed))
+    perm = None
+    if spec.perm != "none":
+        # popularity tallied from the request stream itself — the
+        # serving stand-in for train-set interaction counts
+        from repro.core.assign import popularity_permutation
+        counts = np.zeros(codes.shape[0], np.int64)
+        for h in hists:
+            ids = np.asarray(h).reshape(-1)
+            ids = ids[(ids >= 0) & (ids < counts.size)]
+            np.add.at(counts, ids, 1)
+        perm = popularity_permutation(counts)
+
     with mesh_ctx:
         registry = CatalogueRegistry(shards=args.mesh,
-                                     prune=args.prune)
-        registry.publish(codes, int(emb.cfg.b))
+                                     prune=spec.prune)
+        registry.publish(codes, int(emb.cfg.b), perm=perm)
 
         pool = ReplicaPool(
             [Replica(model, params, k=args.top_k,
-                     warm=(ThresholdState(args.warm)
-                           if args.warm is not None and args.prune
-                           else None),
-                     name=f"replica{i}")
+                     warm=(ThresholdState(spec.warm)
+                           if spec.warm is not None else None),
+                     name=f"replica{i}", spec=spec)
              for i in range(args.replicas)],
             merge_every=args.merge_every)
 
@@ -132,15 +151,12 @@ def main():
                 rep.serve(dummy, live)
         pool.reset_warm()
 
-        metrics = ServerMetrics(config=_config_name(args))
+        metrics = ServerMetrics(config=_config_name(args, spec))
         server = RetrievalServer(
             pool, registry, max_batch=args.max_batch,
             max_delay=args.max_delay_ms / 1e3, buckets=buckets,
             metrics=metrics)
 
-        hists = request_stream(args.requests, n_items=n_items,
-                               max_len=hist_len, reserved=reserved,
-                               seed=args.seed)
         arrivals = poisson_arrivals(args.rate, args.requests,
                                     seed=args.seed)
         t0 = time.perf_counter()
@@ -179,11 +195,15 @@ def main():
         print("server-smoke OK")
 
 
-def _config_name(args) -> str:
+def _config_name(args, spec) -> str:
+    """Label what actually RUNS (the resolved spec), not the argv: a
+    --no-fused or non-JPQ run drops prune/perm/warm in resolution."""
     name = "queue" if args.max_batch > 1 else "sync-loop"
-    if args.prune:
+    if spec.prune:
         name += "+prune"
-    if args.warm is not None and args.prune:
+    if spec.perm != "none":
+        name += "+perm"
+    if spec.warm is not None:
         name += "+warm"
         if args.replicas > 1 and args.merge_every:
             name += "-merged"

@@ -113,24 +113,48 @@ class TwoTower:
                        == jnp.arange(b)[None, :])
         return loss, {"loss": loss, "in_batch_acc": acc}
 
+    def bind_engine(self, p, spec, *, catalogue=None):
+        """Bind a ``core.engine.RetrievalSpec`` to this model + params:
+        returns a ``BoundRetrieval`` mapping a request (a batch dict
+        with ``user_hist``, or a raw [B, H] history array) through the
+        user tower into the engine's scorer.  This is what
+        ``serve/replica.py`` jits, one compiled function per
+        (spec, catalogue version, bucket length)."""
+        from repro.core import engine as _engine
+        eng = _engine.RetrievalEngine(spec, self.emb, p["item_emb"],
+                                      catalogue=catalogue)
+
+        def encode(batch):
+            hist = batch["user_hist"] if isinstance(batch, dict) else batch
+            return self.user_vec(p, hist)                  # [B, d]
+
+        return _engine.BoundRetrieval(eng, encode)
+
     def retrieve(self, p, batch, *, top_k: int = 100, fused: bool = True,
                  prune=None, perm=None, warm=None,
                  return_stats: bool = False):
         """Score user(s) against the full catalogue; returns top-k.
         With kind="jpq" the catalogue read is m bytes/item (codes) not
-        4d — and the default fused path (core.serve.retrieve_topk)
-        merges scoring with a running top-k so the [B, n_rows] score
-        matrix is never materialised.  fused=False keeps the
-        materialise-then-hierarchical-top-k reference path; ``prune``
-        additionally skips code tiles whose score bound cannot reach
-        the running top-k (bit-exact, docs/serving.md), ``warm`` seeds
-        the threshold from a ``serve.ThresholdState`` EMA, and
-        ``return_stats`` appends the pruning-stats dict."""
-        from repro.core import serve
-        u = self.user_vec(p, batch["user_hist"])           # [B, d]
-        return serve.retrieve_topk(self.emb, p["item_emb"], u, k=top_k,
-                                   fused=fused, prune=prune, perm=perm,
-                                   warm=warm, return_stats=return_stats)
+        4d — and the default fused path merges scoring with a running
+        top-k so the [B, n_rows] score matrix is never materialised.
+        fused=False keeps the materialise-then-hierarchical-top-k
+        reference path; ``prune`` additionally skips code tiles whose
+        score bound cannot reach the running top-k (bit-exact,
+        docs/serving.md), ``warm`` seeds the threshold from a
+        ``serve.ThresholdState`` EMA, and ``return_stats`` appends the
+        pruning-stats dict.
+
+        Compatibility wrapper over ``bind_engine`` — kwargs normalise
+        to a ``RetrievalSpec`` exactly as ``core.serve.retrieve_topk``'s
+        shim does (docs/engine.md)."""
+        from repro.core import engine as _engine
+        spec = _engine.spec_for(self.emb, k=top_k, fused=fused,
+                                prune=prune, perm=perm,
+                                stats=return_stats)
+        bound = self.bind_engine(p, spec)
+        if spec.prune:
+            bound.engine.bind_catalogue(prune=prune, perm=perm)
+        return bound.retrieve(batch, floor=warm)
 
     def bulk_retrieve(self, p, batch, *, top_k: int = 100,
                       chunk: int = 2048):

@@ -201,45 +201,66 @@ class SeqRecModel:
         h = self.encode(p, self._serve_seq(seq))
         return self._mask_special(self.emb.logits(p["item_emb"], h[:, -1]))
 
+    def bind_engine(self, p, spec, *, catalogue=None):
+        """Bind a ``core.engine.RetrievalSpec`` to this model + params:
+        returns a ``BoundRetrieval`` mapping a request (a [B, S]
+        sequence, or a dict with ``user_hist``) through the encoder,
+        the engine's scorer, and the serve protocol's post-processing.
+        The engine runs at an INTERNAL k of ``min(spec.k + 2, n_rows)``
+        — two extra candidates cover the pad + [MASK] rows that the
+        materialised path masks before its top-k — and the post step
+        demotes those rows and re-ranks, so results stay bit-equal to
+        ``lax.top_k(score_last(p, seq), k)``."""
+        from repro.core import engine as _engine
+        n_rows = self.cfg.n_rows
+        k_out = min(int(spec.k), n_rows)
+        inner = dataclasses.replace(spec, k=min(k_out + 2, n_rows))
+        eng = _engine.RetrievalEngine(inner, self.emb, p["item_emb"],
+                                      catalogue=catalogue)
+
+        def encode(request):
+            seq = request["user_hist"] if isinstance(request, dict) \
+                else request
+            return self.encode(p, self._serve_seq(seq))[:, -1]
+
+        def post(out):
+            stats = None
+            if inner.stats:
+                v, i, stats = out
+            else:
+                v, i = out
+            forbidden = (i == 0) | (i == n_rows - 1)
+            v = jnp.where(forbidden, NEG_INF, v)
+            vv, ids = _engine.rerank_candidates(v, i, k_out)
+            return (vv, ids, stats) if inner.stats else (vv, ids)
+
+        return _engine.BoundRetrieval(eng, encode, post)
+
     def retrieve_topk(self, p, seq, *, k: int, fused: bool = True,
                       prune=None, perm=None, warm=None, block_n=None,
                       backend=None, return_stats: bool = False):
         """Top-k catalogue retrieval from the last position WITHOUT
         materialising the [B, n_rows] score matrix ``score_last``
-        builds: JPQ heads route through the fused PQTopK path
-        (core.serve.retrieve_topk, optionally score-bound pruned);
-        full/QR heads fall back to materialise + hierarchical top-k.
-        Bit-equal to ``lax.top_k(score_last(p, seq), k)`` — pad and
-        [MASK] rows are demoted to the same NEG_INF, and the candidate
-        re-rank tie-breaks on item id like a stable top-k.  ``warm`` /
+        builds: JPQ heads route through the engine's fused PQTopK
+        scorer (optionally score-bound pruned); full/QR heads fall back
+        to materialise + hierarchical top-k.  Bit-equal to
+        ``lax.top_k(score_last(p, seq), k)`` — pad and [MASK] rows are
+        demoted to the same NEG_INF, and the candidate re-rank
+        tie-breaks on item id like a stable top-k.  ``warm`` /
         ``return_stats`` follow serve.retrieve_topk; note the stats'
         ``theta`` is the INTERNAL (k+2)-candidate threshold — exactly
-        what a ThresholdState should EMA for this entrypoint."""
-        from repro.core import serve
-        n_rows = self.cfg.n_rows
-        k_out = min(int(k), n_rows)
-        h = self.encode(p, self._serve_seq(seq))
-        # two extra candidates cover the pad + [MASK] rows that the
-        # materialised path masks before its top-k
-        out = serve.retrieve_topk(
-            self.emb, p["item_emb"], h[:, -1], k=min(k_out + 2, n_rows),
-            fused=fused, prune=prune, perm=perm, warm=warm,
-            block_n=block_n, backend=backend, return_stats=return_stats)
-        stats = None
-        if return_stats:
-            v, i, stats = out
-        else:
-            v, i = out
-        forbidden = (i == 0) | (i == n_rows - 1)
-        v = jnp.where(forbidden, NEG_INF, v)
-        # stable (value desc, id asc) re-rank; the bit-level key
-        # reproduces lax.top_k's total order (incl. ±0.0), so this
-        # equals a top_k over the masked materialised scores
-        from repro.kernels.jpq_topk.jpq_topk import desc_sort_key
-        _, ids, vv = jax.lax.sort((desc_sort_key(v), i, v), num_keys=2)
-        if return_stats:
-            return vv[..., :k_out], ids[..., :k_out], stats
-        return vv[..., :k_out], ids[..., :k_out]
+        what a ThresholdState should EMA for this entrypoint.
+
+        Compatibility wrapper over ``bind_engine`` (docs/engine.md)."""
+        from repro.core import engine as _engine
+        spec = _engine.spec_for(self.emb, k=k, fused=fused,
+                                block_n=block_n, backend=backend,
+                                prune=prune, perm=perm,
+                                stats=return_stats)
+        bound = self.bind_engine(p, spec)
+        if bound.engine.spec.prune:
+            bound.engine.bind_catalogue(prune=prune, perm=perm)
+        return bound.retrieve(seq, floor=warm)
 
 
 def _xent(logits, labels):

@@ -132,17 +132,14 @@ class CatalogueRegistry:
             self._errors.append(e)
 
     def _resolve_block_n(self, N: int):
-        from repro.kernels.jpq_topk import ops as _tops
-        if self.block_n:
-            return int(self.block_n)
-        if self.shards > 1 and N % self.shards == 0:
-            return _tops.mesh_prune_block_n(N, self.shards)
-        return _tops.prune_block_n(N)
+        from repro.core import engine as _engine
+        return _engine.resolve_prune_block_n(N, shards=self.shards,
+                                             block_n=self.block_n)
 
     def _build_and_swap(self, version, codes, b, perm):
         import jax
         import jax.numpy as jnp
-        from repro.kernels.jpq_topk import ops as _tops
+        from repro.core import engine as _engine
 
         t0 = time.perf_counter()
         codes = jnp.asarray(codes)
@@ -155,7 +152,8 @@ class CatalogueRegistry:
             with self._lock:
                 state = self._states.get(key)
             if state is None:
-                state = _tops.prepare_pruning(codes, int(b), bn, perm=perm)
+                state = _engine.build_prune_state(codes, int(b),
+                                                  block_n=bn, perm=perm)
                 jax.block_until_ready(state)
 
         # probe validation: pruned-over-new-state must be bit-identical
@@ -166,8 +164,8 @@ class CatalogueRegistry:
                 jax.random.PRNGKey(self.probe_seed),
                 (self.probe_batch, codes.shape[1], int(b)), jnp.float32)
             k = min(self.probe_k, N)
-            rv, ri = _tops.jpq_topk_lut(probe, codes, k)
-            pv, pi = _tops.jpq_topk_lut(probe, codes, k, prune=state)
+            rv, ri = _engine.probe_topk(probe, codes, k)
+            pv, pi = _engine.probe_topk(probe, codes, k, prune=state)
             if not (np.array_equal(np.asarray(rv), np.asarray(pv))
                     and np.array_equal(np.asarray(ri), np.asarray(pi))):
                 raise ValueError(

@@ -1,18 +1,23 @@
 """Data-parallel serving replicas over one model-sharded catalogue.
 
 A ``Replica`` binds (model, params) and serves padded fixed-shape
-batches from the micro-batching queue through the existing fused serve
-path (``core.serve.retrieve_topk`` via ``TwoTower.retrieve`` /
-``SeqRecModel.retrieve_topk``), with the live catalogue version's
-prebuilt ``PruneState`` and an optional per-replica warm-threshold EMA.
+batches from the micro-batching queue through the model's bound
+retrieval engine (``model.bind_engine(params, spec, catalogue=...)`` —
+``core.engine``), with the live catalogue version's prebuilt
+``PruneState`` and an optional per-replica warm-threshold EMA.
 
 **Jit discipline.**  The dispatch function is jit-compiled once per
-``(catalogue version, bucket length)`` and cached — the ``PruneState``
-is *closed over* (its ``block_n`` / ``tie_break_ids`` fields are
-Python ints that must stay static), while the warm floor is a traced
-``[max_batch]`` argument so EMA updates never retrigger compilation.
-Fixed ``[max_batch, L_bucket]`` shapes keep per-row results bitwise
-stable (see ``serve.queue``).
+``(RetrievalSpec, catalogue version, bucket length)`` and cached in an
+engine-owned ``JitCache`` — the spec's hashability IS the cache key,
+so two serve configurations can never silently alias a compiled
+function.  The ``PruneState`` is *closed over* (its ``block_n`` /
+``tie_break_ids`` fields are Python ints that must stay static), while
+the warm floor is a traced ``[max_batch]`` argument so EMA updates
+never retrigger compilation.  Fixed ``[max_batch, L_bucket]`` shapes
+keep per-row results bitwise stable (see ``serve.queue``).  On
+catalogue hot-swap the server evicts entries for retired versions
+(``evict`` — keep the live + draining version), so the cache stays
+bounded over any number of swaps.
 
 **Warm floors and dummy rows.**  The floor for padding rows (row ≥
 ``n_real``) is forced to −inf before dispatch: a dummy all-pad row
@@ -31,10 +36,11 @@ state).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.engine import JitCache, RetrievalSpec
 from repro.core.serve import ThresholdState
 from repro.serve.queue import Batch
 from repro.serve.registry import CatalogueVersion
@@ -51,58 +57,70 @@ class Result:
     warm_hit: bool = False
 
 
-def _bind_retrieve(model, params, k: int) -> Callable:
-    """Adapter: (hist [B, L], prune, warm, return_stats) -> retrieve
-    call on whichever serve entrypoint the model exposes."""
-    if hasattr(model, "retrieve"):                        # TwoTower
-        def fn(hist, *, prune=None, warm=None, return_stats=False):
-            return model.retrieve(params, {"user_hist": hist}, top_k=k,
-                                  prune=prune, warm=warm,
-                                  return_stats=return_stats)
-        return fn
-    if hasattr(model, "retrieve_topk"):                   # SeqRecModel
-        def fn(hist, *, prune=None, warm=None, return_stats=False):
-            return model.retrieve_topk(params, hist, k=k, prune=prune,
-                                       warm=warm,
-                                       return_stats=return_stats)
-        return fn
-    raise TypeError(f"{type(model).__name__} exposes neither "
-                    f".retrieve nor .retrieve_topk")
-
-
 class Replica:
     """One serving worker: jit cache + warm EMA over a bound model."""
 
     def __init__(self, model, params, *, k: int,
                  warm: Optional[ThresholdState] = None,
-                 name: str = "replica0"):
+                 name: str = "replica0",
+                 spec: Optional[RetrievalSpec] = None):
+        if not hasattr(model, "bind_engine"):
+            raise TypeError(
+                f"{type(model).__name__} exposes no .bind_engine — "
+                f"serving goes through core.engine (docs/engine.md)")
         self.name = name
         self.k = int(k)
         self.warm = warm
-        self._retrieve = _bind_retrieve(model, params, self.k)
-        # (version, bucket_len) -> jitted dispatch fn
-        self._jit: Dict[Tuple[int, int], Callable] = {}
+        self.model = model
+        self.params = params
+        # base spec: policy knobs that don't depend on the catalogue
+        # version (kind/backend/block_n/fused).  prune/perm/warm/stats
+        # are stamped per version in _dispatch_fn — they follow the
+        # live catalogue, not the replica.
+        if spec is None:
+            spec = RetrievalSpec(kind=model.emb.cfg.kind, k=self.k)
+        self._base_spec = dataclasses.replace(
+            spec, k=self.k, prune=False, perm="none", warm=None,
+            stats=False)
+        self.cache = JitCache()
         self.batches_served = 0
 
     # ------------------------------------------------------------- jit
+    def _version_spec(self, version: CatalogueVersion) -> RetrievalSpec:
+        """The full spec a catalogue version serves under: the base
+        policy + the version-dependent prune/perm/warm/stats fields."""
+        pruned = version.state is not None
+        return dataclasses.replace(
+            self._base_spec, prune=pruned, stats=pruned,
+            warm=(self.warm.decay
+                  if (self.warm is not None and pruned) else None),
+            perm=("catalogue"
+                  if (pruned and version.perm is not None) else "none"))
+
     def _dispatch_fn(self, version: CatalogueVersion,
                      bucket_len: int) -> Callable:
-        key = (version.version, bucket_len)
-        fn = self._jit.get(key)
-        if fn is None:
+        spec = self._version_spec(version)
+
+        def build():
             import jax
-            state = version.state            # closed over: static ints
-            if state is not None:
+            # the PruneState (static ints inside) is closed over via
+            # the bound engine; the floor is traced
+            bound = self.model.bind_engine(self.params, spec,
+                                           catalogue=version)
+            if spec.prune:
                 def run(hist, floor):
-                    return self._retrieve(hist, prune=state, warm=floor,
-                                          return_stats=True)
+                    return bound.retrieve(hist, floor=floor)
             else:
                 def run(hist, floor):
                     del floor                # unpruned path: no knobs
-                    return self._retrieve(hist)
-            fn = jax.jit(run)
-            self._jit[key] = fn
-        return fn
+                    return bound.retrieve(hist)
+            return jax.jit(run)
+
+        return self.cache.get(spec, version.version, bucket_len, build)
+
+    def evict(self, keep_versions) -> int:
+        """Drop compiled dispatches for retired catalogue versions."""
+        return self.cache.evict(keep_versions)
 
     # ----------------------------------------------------------- serve
     def serve(self, batch: Batch,
@@ -186,3 +204,10 @@ class ReplicaPool:
         for r in self.replicas:
             if r.warm is not None:
                 r.warm.reset()
+
+    def evict_retired(self, keep_versions) -> int:
+        """Drop every replica's compiled dispatches for catalogue
+        versions outside ``keep_versions`` (the hot-swap rule: keep the
+        live version plus the one in-flight batches may still drain
+        on); returns the total number of entries evicted."""
+        return sum(r.evict(keep_versions) for r in self.replicas)

@@ -68,6 +68,10 @@ class RetrievalServer:
         if self._last_version is not None and \
                 version.version != self._last_version:
             self.pool.reset_warm()
+            # retire compiled dispatches for dead versions: keep the
+            # new live version and the one in-flight work may still
+            # drain on, so the jit cache stays bounded across swaps
+            self.pool.evict_retired({version.version, self._last_version})
             self.metrics.catalogue_swaps += 1
         self._last_version = version.version
         done = 0

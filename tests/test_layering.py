@@ -1,0 +1,137 @@
+"""Layering lint: the engine seam must not silently erode.
+
+The retrieval engine (core/engine.py) exists so serving strategies are
+registered ONCE and consumed declaratively — which only holds if the
+layers above core/ stop reaching into the scoring internals directly.
+This AST scan over ``src/repro`` enforces the seam:
+
+* outside ``core/`` and ``kernels/``, no module imports
+  ``repro.kernels.jpq_topk.ops`` (any import form) or touches
+  ``core.sharded.fused_topk_over_codes`` — those are the engine's
+  implementation details, reachable only through a scorer or the
+  ``core.engine`` catalogue-prep helpers;
+* ``models/`` never imports ``repro.serve`` (models are BELOW the
+  serving layer; the replica binds them via ``bind_engine``, not the
+  other way round).  ``repro.core.serve`` — a core module — stays
+  allowed.
+
+Pure-stdlib (ast only), so CI can run it before anything jax loads.
+"""
+import ast
+import os
+
+SRC = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "src", "repro"))
+
+KERNEL_OPS = "repro.kernels.jpq_topk.ops"
+FUSED_TOPK = "fused_topk_over_codes"
+
+
+def _py_files():
+    for root, _dirs, files in os.walk(SRC):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                yield os.path.join(root, f)
+
+
+def _rel(path):
+    return os.path.relpath(path, SRC).replace(os.sep, "/")
+
+
+def _layer_exempt(rel):
+    """core/ owns the seam and kernels/ is below it — both may import
+    the scoring internals freely."""
+    return rel.startswith("core/") or rel.startswith("kernels/")
+
+
+def _violations_in(path):
+    rel = _rel(path)
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    out = []
+    in_models = rel.startswith("models/")
+    exempt = _layer_exempt(rel)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if not exempt and alias.name.startswith(KERNEL_OPS):
+                    out.append((rel, node.lineno,
+                                f"import {alias.name} — kernel internals "
+                                f"are core/-only (use core.engine)"))
+                if in_models and (alias.name == "repro.serve"
+                                  or alias.name.startswith("repro.serve.")):
+                    out.append((rel, node.lineno,
+                                f"import {alias.name} — models/ sits "
+                                f"below the serving layer"))
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            names = {a.name for a in node.names}
+            if not exempt:
+                if mod.startswith(KERNEL_OPS) or (
+                        mod == "repro.kernels.jpq_topk" and "ops" in names):
+                    out.append((rel, node.lineno,
+                                f"from {mod} import {sorted(names)} — "
+                                f"kernel internals are core/-only "
+                                f"(use core.engine)"))
+                if mod.endswith("core.sharded") and FUSED_TOPK in names:
+                    out.append((rel, node.lineno,
+                                f"from {mod} import {FUSED_TOPK} — "
+                                f"scorer internals; go through "
+                                f"core.engine's registry"))
+            if in_models and (mod == "repro.serve"
+                              or mod.startswith("repro.serve.")):
+                out.append((rel, node.lineno,
+                            f"from {mod} import {sorted(names)} — "
+                            f"models/ sits below the serving layer"))
+        elif isinstance(node, ast.Attribute):
+            # sharded.fused_topk_over_codes(...) attribute access
+            if not exempt and node.attr == FUSED_TOPK:
+                out.append((rel, node.lineno,
+                            f".{FUSED_TOPK} attribute access — scorer "
+                            f"internals; go through core.engine"))
+    return out
+
+
+def test_scan_covers_the_tree():
+    files = list(_py_files())
+    rels = {_rel(f) for f in files}
+    # guard against the scan silently pointing at an empty directory
+    assert "core/engine.py" in rels and "serve/replica.py" in rels
+    assert len(files) > 30
+
+
+def test_no_kernel_or_scorer_internals_outside_core():
+    bad = []
+    for path in _py_files():
+        bad.extend(_violations_in(path))
+    assert not bad, "layering violations:\n" + "\n".join(
+        f"  {rel}:{line}: {msg}" for rel, line, msg in bad)
+
+
+def test_lint_actually_catches_violations(tmp_path):
+    """The lint's own regression test: each forbidden form, planted in
+    a synthetic 'serve/' and 'models/' module, must be flagged."""
+    samples = {
+        "serve/bad_ops.py": "from repro.kernels.jpq_topk import ops\n",
+        "serve/bad_ops2.py": "import repro.kernels.jpq_topk.ops as o\n",
+        "serve/bad_fused.py":
+            "from repro.core.sharded import fused_topk_over_codes\n",
+        "serve/bad_attr.py":
+            "from repro.core import sharded\n"
+            "x = sharded.fused_topk_over_codes\n",
+        "models/bad_serve.py": "from repro.serve import Replica\n",
+        "core/ok_ops.py": "from repro.kernels.jpq_topk import ops\n",
+    }
+    global SRC
+    real_src = SRC
+    try:
+        SRC = str(tmp_path)
+        for rel, src in samples.items():
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(src)
+        flagged = {v[0] for path in _py_files()
+                   for v in _violations_in(path)}
+    finally:
+        SRC = real_src
+    assert flagged == {r for r in samples if not r.startswith("core/")}
