@@ -601,6 +601,103 @@ def roofline():
              f"bottleneck={rec['bottleneck']}")
 
 
+# ------------------------------------------- semantic-ID generative head
+
+def semantic_decode_bench(fast: bool = True):
+    """Semantic-ID generative retrieval (core.semantic): host trie
+    build, constrained-beam decode latency across beam widths (the
+    per-step ``[B, W, b]`` gather is the cost driver), exhaustive-beam
+    parity vs the materialise chain, and the served A/B — NDCG@10 /
+    HR@10 + latency for the semantic head vs the fused-pruned score
+    head on the SAME trained checkpoint (docs/serving.md)."""
+    import functools
+    import time as _time
+
+    from repro.core import engine as engine_mod
+    from repro.core import semantic
+
+    # ---- micro: synthetic catalogue, scaling beam width
+    B, m, b, k = (8, 4, 64, 10) if _SMOKE else (32, 8, 64, 10)
+    N = 5_000 if _SMOKE else 100_000
+    key = jax.random.PRNGKey(0)
+    codes = np.asarray(jax.random.randint(key, (N, m), 0, b, jnp.int32))
+    part = jax.random.normal(jax.random.fold_in(key, 1), (B, m, b),
+                             jnp.float32)
+    t0 = _time.perf_counter()
+    idx = semantic.build_code_index(codes, b)
+    build_us = (_time.perf_counter() - t0) * 1e6
+    _row(f"semantic/N={N}/index_build", f"{build_us:.0f}",
+         f"n_paths={idx.n_paths};max_leaf={idx.max_leaf}")
+    for W in ((16, 64) if _SMOKE else (16, 64, 256)):
+        f = jax.jit(functools.partial(semantic.semantic_decode, index=idx,
+                                      k=k, beams=W))
+        us = time_fn(f, part, iters=5, warmup=1)
+        _row(f"semantic/N={N}/decode_W={W}", f"{us:.0f}",
+             f"gather_elems={B * min(W, idx.n_paths) * b}")
+
+    # ---- exhaustive-beam parity on a catalogue small enough to keep
+    # every path alive (the tests pin bit-match; the row records it ran)
+    N2 = 1_000 if _SMOKE else 2_000
+    codes2 = np.asarray(jax.random.randint(jax.random.fold_in(key, 2),
+                                           (N2, 4), 0, 16, jnp.int32))
+    part2 = jax.random.normal(jax.random.fold_in(key, 3), (B, 4, 16),
+                              jnp.float32)
+    idx2 = semantic.build_code_index(codes2, 16)
+
+    def _mat(p2, c2):            # the jpq.logits accumulation chain
+        c = jnp.asarray(c2).astype(jnp.int32)
+        s = p2[..., 0, :][..., c[:, 0]]
+        for j in range(1, c.shape[1]):
+            s = s + p2[..., j, :][..., c[:, j]]
+        return jax.lax.top_k(s, k)
+    rv, ri = jax.jit(_mat)(part2, codes2)
+    f_ex = jax.jit(functools.partial(semantic.semantic_decode, index=idx2,
+                                     k=k, beams=None))
+    ev_, ei = f_ex(part2)
+    exact = bool(np.array_equal(np.asarray(ev_), np.asarray(rv))
+                 and np.array_equal(np.asarray(ei), np.asarray(ri)))
+    us_ex = time_fn(f_ex, part2, iters=5, warmup=1)
+    us_mat = time_fn(jax.jit(_mat), part2, codes2, iters=5, warmup=1)
+    _row(f"semantic/N={N2}/exhaustive", f"{us_ex:.0f}",
+         f"n_paths={idx2.n_paths};exact_match={exact};"
+         f"materialise_us={us_mat:.0f}")
+
+    # ---- served A/B: one checkpoint, two heads (docs/serving.md table)
+    data = _make_data("ml1m", fast)
+    model = _variant_model("sasrec", data, "jpq-random", m=4, b=16)
+    steps = 2 if _SMOKE else (150 if fast else 600)
+    params, _, _ = train_seqrec(model, data, steps=steps)
+    users = list(range(0, data.n_users_eff,
+                       max(data.n_users_eff // 128, 1)))
+    ev = data.eval_batch(users, split="test")
+    seq = jnp.asarray(ev["seq"])
+    target = np.asarray(ev["target"]).reshape(-1, 1)
+    emb_b = int(model.emb.cfg.b)
+    item_codes = params["item_emb"]["codes"].value
+    n_rows = model.cfg.n_rows
+    heads = [("score-fused-pruned",
+              engine_mod.RetrievalSpec(kind="jpq", k=10, prune=True)),
+             ("semantic-W32",
+              engine_mod.RetrievalSpec(kind="semantic", k=10, beams=32)),
+             ("semantic-exhaustive",
+              engine_mod.RetrievalSpec(kind="semantic", k=10,
+                                       beams=n_rows))]
+    for name, spec in heads:
+        bound = model.bind_engine(params, spec)
+        if spec.prune:
+            bound.engine.bind_catalogue(
+                prune=engine_mod.build_prune_state(item_codes, emb_b))
+        fn = jax.jit(bound.retrieve)
+        _, ids = fn(seq)
+        us = time_fn(fn, seq, iters=3 if _SMOKE else 10, warmup=1)
+        hit = np.asarray(ids) == target              # [U, 10]
+        hr = hit.any(1).mean()
+        ndcg = (hit.any(1) / np.log2(np.argmax(hit, 1) + 2)).mean()
+        _row(f"semantic/ab/{name}", f"{us:.0f}",
+             f"ndcg10={ndcg:.4f};hr10={hr:.4f};"
+             f"eval_users={len(users)};steps={steps}")
+
+
 BENCHES = {
     "table2": table2_memory,
     "table45": table45_strategies,
@@ -609,6 +706,7 @@ BENCHES = {
     "jpq_scoring": jpq_scoring,
     "jpq_topk": jpq_topk_bench,
     "serve_latency": serve_latency,
+    "semantic_decode": semantic_decode_bench,
     "kernels": kernels_bench,
     "grad_exchange": grad_exchange,
     "roofline": roofline,

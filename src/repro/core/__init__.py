@@ -17,3 +17,6 @@ from repro.core.engine import (RetrievalSpec, RetrievalEngine,  # noqa: F401
                                BoundRetrieval, JitCache, register_scorer,
                                unregister_scorer, spec_for, spec_from_args,
                                add_spec_args)
+# semantic after engine: importing it registers the "semantic-id"
+# scorer on the engine's registry (kind="semantic" specs resolve)
+from repro.core import semantic  # noqa: F401,E402

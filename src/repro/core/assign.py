@@ -57,9 +57,11 @@ def _matmul_At(users, items, n_items, Y):       # A.T @ Y
 
 def svd_item_embeddings(users, items, n_users: int, n_items: int, m: int,
                         *, oversample: int = 8, n_iter: int = 2,
-                        seed: int = 0) -> np.ndarray:
+                        seed=0) -> np.ndarray:
     """Right singular vectors (item embeddings) of the binary matrix,
-    via Halko randomized SVD with power iterations. Matrix-free."""
+    via Halko randomized SVD with power iterations. Matrix-free.
+    ``seed`` is anything ``np.random.default_rng`` accepts (an int, or
+    a ``SeedSequence`` child when called via ``build_codebook``)."""
     rng = np.random.default_rng(seed)
     users, items = _dedupe(np.asarray(users), np.asarray(items), n_items)
     k = min(m + oversample, min(n_users, n_items))
@@ -85,8 +87,9 @@ def svd_item_embeddings(users, items, n_users: int, n_items: int, m: int,
 def bpr_item_embeddings(users, items, n_users: int, n_items: int, m: int,
                         *, epochs: int = 5, lr: float = 0.05,
                         reg: float = 1e-4, batch: int = 8192,
-                        seed: int = 0) -> np.ndarray:
-    """Tiny host-side BPR trainer (SGD, uniform negatives)."""
+                        seed=0) -> np.ndarray:
+    """Tiny host-side BPR trainer (SGD, uniform negatives).  ``seed``
+    is anything ``np.random.default_rng`` accepts."""
     rng = np.random.default_rng(seed)
     users = np.asarray(users, np.int64)
     items = np.asarray(items, np.int64)
@@ -131,6 +134,27 @@ def popularity_permutation(counts=None, *, interactions=None,
         counts = np.zeros(int(n_items), np.int64)
         np.add.at(counts, np.asarray(interactions[1], np.int64), 1)
     counts = np.asarray(counts)
+    # garbage counts yield a garbage sweep order that silently serves
+    # (pruning stays exact for ANY order, it just stops skipping) —
+    # so reject them loudly instead
+    if counts.ndim != 1:
+        raise ValueError(
+            f"counts must be a 1-D per-item tally [n_items], got shape "
+            f"{counts.shape}")
+    if n_items is not None and counts.shape[0] != int(n_items):
+        raise ValueError(
+            f"counts has {counts.shape[0]} entries but n_items="
+            f"{int(n_items)} — pass one count per catalogue row")
+    if np.issubdtype(counts.dtype, np.floating) \
+            and np.isnan(counts).any():
+        raise ValueError(
+            "counts contains NaN — NaN poisons the sort comparator and "
+            "yields an arbitrary sweep order; clean the tally first")
+    if counts.size and counts.min() < 0:
+        raise ValueError(
+            f"counts contains negative values (min {counts.min()}) — "
+            f"popularity tallies are non-negative; clean the tally "
+            f"first")
     # stable sort on -counts: equal-count items stay in ascending id
     return np.argsort(-counts, kind="stable")
 
@@ -162,19 +186,31 @@ def build_codebook(strategy: str, n_items: int, m: int, b: int = 256, *,
                    n_users: Optional[int] = None, seed: int = 0,
                    **kw) -> np.ndarray:
     """int32 codes [n_items, m] in [0, b). ``interactions=(users, items)``
-    is required for svd/bpr."""
-    rng = np.random.default_rng(seed)
+    is required for svd/bpr.
+
+    RNG discipline: ``seed`` is expanded through
+    ``np.random.SeedSequence(seed).spawn`` into independent per-stage
+    child streams — one for the embedding stage (random draw / SVD's
+    ``omega`` / BPR's init+negatives), one for ``_discretise``'s
+    tie-breaking noise.  Previously all stages were seeded with the
+    same integer, so the discretise noise replayed the embedding
+    stage's bitstream.  This DELIBERATELY changes the code bitstream
+    for a given seed versus older checkouts (the codebook tests are
+    property-based; tests/test_core_jpq.py pins the new streams).
+    """
+    embed_ss, disc_ss = np.random.SeedSequence(seed).spawn(2)
     if strategy == "random":
-        return rng.integers(0, b, (n_items, m), dtype=np.int32)
+        return np.random.default_rng(embed_ss).integers(
+            0, b, (n_items, m), dtype=np.int32)
     if interactions is None or n_users is None:
         raise ValueError(f"strategy {strategy!r} needs interactions+n_users")
     users, items = interactions
     if strategy == "svd":
         emb = svd_item_embeddings(users, items, n_users, n_items, m,
-                                  seed=seed, **kw)
+                                  seed=embed_ss, **kw)
     elif strategy == "bpr":
         emb = bpr_item_embeddings(users, items, n_users, n_items, m,
-                                  seed=seed, **kw)
+                                  seed=embed_ss, **kw)
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
-    return _discretise(emb, b, rng)
+    return _discretise(emb, b, np.random.default_rng(disc_ss))

@@ -77,6 +77,7 @@ class RetrievalSpec:
     perm: str = "none"             # sweep-order policy
     warm: Optional[float] = None   # ThresholdState EMA decay policy
     stats: bool = False            # append the pruning-stats dict
+    beams: Optional[int] = None    # semantic-ID beam width (None: auto)
 
     def __post_init__(self):
         if not isinstance(self.kind, str) or not self.kind:
@@ -112,6 +113,10 @@ class RetrievalSpec:
                 "stats are a pruned-fused-path feature (skip counts and "
                 "the final threshold theta only exist on the pruned "
                 "sweep) — set prune=True and fused=True, or stats=False")
+        if self.beams is not None and int(self.beams) < 1:
+            raise ValueError(
+                f"spec beams must be a positive int or None (auto), "
+                f"got {self.beams!r}")
 
 
 def spec_for(emb_or_kind, *, k: int, fused: bool = True,
@@ -125,11 +130,22 @@ def spec_for(emb_or_kind, *, k: int, fused: bool = True,
     (non-JPQ kind or ``fused=False`` — those combinations always fell
     through to the materialise reference), while ``stats`` on an
     incapable path raises (it always did, via the pruned-path guard).
+    ``warm_decay`` is never silently dropped: a caller serving a warm
+    floor on a path with no pruning threshold is a caller bug, so an
+    undeliverable warm policy raises instead of recording ``warm=None``
+    (the shims forward it — the round-trip regression in
+    ``tests/test_engine.py`` pins this).
     """
     kind = emb_or_kind if isinstance(emb_or_kind, str) \
         else emb_or_kind.cfg.kind
     supports_prune = bool(fused) and kind == "jpq"
     pruned = bool(prune) and supports_prune
+    if warm_decay is not None and not pruned:
+        raise ValueError(
+            "warm floors are pruned-JPQ-fused-path features: this "
+            "path has no pruning threshold to seed — serve "
+            "kind='jpq' with fused=True and prune=True, or drop the "
+            "warm policy")
     return RetrievalSpec(
         kind=kind, k=int(k), fused=bool(fused), backend=backend,
         block_n=block_n, prune=pruned,
@@ -169,6 +185,18 @@ def add_spec_args(ap, *, fused_default: bool = True,
                     const=0.9, default=None, type=float, metavar="DECAY",
                     help="EMA warm-start of the pruning threshold "
                          "(core.serve.ThresholdState; default decay 0.9)")
+    ap.add_argument("--head", choices=("score", "semantic"),
+                    default="score",
+                    help="retrieval head: 'score' sweeps the catalogue "
+                         "(fused/materialise per the flags above); "
+                         "'semantic' decodes items as their m-token "
+                         "code sequences (constrained beam search — "
+                         "needs a JPQ embedding; docs/serving.md)")
+    ap.add_argument("--beams", type=int, default=None, metavar="W",
+                    help="semantic-head beam width (default: "
+                         "max(32, 4*k), capped at the trie's path "
+                         "count — beams >= n_paths is exhaustive and "
+                         "bit-matches the materialise scorer)")
 
 
 def spec_from_args(args, *, kind: str = "jpq", k: Optional[int] = None,
@@ -180,7 +208,18 @@ def spec_from_args(args, *, kind: str = "jpq", k: Optional[int] = None,
     prune (and with it perm/warm), exactly the old CLIs' behaviour —
     but now in ONE place instead of two drifted copies.  ``stats``
     defaults to "on iff pruned" (the stats dict only exists there).
+    ``--head semantic`` rewrites the kind to the semantic-ID head —
+    which needs a JPQ embedding underneath (its trie is built from the
+    codes table), so a non-JPQ base kind raises; the pruning-path
+    policies then degrade exactly as for any non-"jpq" kind.
     """
+    if getattr(args, "head", "score") == "semantic":
+        if kind != "jpq":
+            raise ValueError(
+                f"--head semantic decodes JPQ code sequences, so it "
+                f"needs a JPQ item embedding — the model's embedding "
+                f"kind is {kind!r}")
+        kind = "semantic"
     fused = bool(getattr(args, "fused", True))
     prune = bool(getattr(args, "prune", False)) and fused and kind == "jpq"
     perm = "popularity" if (bool(getattr(args, "perm", False)) and prune) \
@@ -191,8 +230,10 @@ def spec_from_args(args, *, kind: str = "jpq", k: Optional[int] = None,
         k = int(getattr(args, "top_k", 10))
     if stats is None:
         stats = prune
+    beams = getattr(args, "beams", None)
     return RetrievalSpec(kind=kind, k=int(k), fused=fused, prune=prune,
-                         perm=perm, warm=warm, stats=bool(stats))
+                         perm=perm, warm=warm, stats=bool(stats),
+                         beams=None if beams is None else int(beams))
 
 
 # ============================================================ registry

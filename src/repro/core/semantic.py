@@ -1,0 +1,301 @@
+"""Semantic-ID generative retrieval: decode items as code sequences.
+
+RecJPQ already factorises every item into ``m`` discrete sub-ids — the
+"semantic ID" interface of generative recommenders.  This module serves
+that interface: instead of sweeping the catalogue (materialise or fused
+PQTopK), the head *decodes* an item as its m-token code sequence with a
+constrained beam search over the codebooks:
+
+* ``build_code_index`` — a host-built trie over the codes table.  Per
+  position j it stores the sorted set of valid key prefixes
+  (``parent_node * b + code``), the generative analogue of
+  ``prepare_pruning``'s presence mask: a continuation is valid iff its
+  key binary-searches into the level's key set.  Because code rows are
+  NOT unique (multiple items may share a code path), leaves carry a CSR
+  (``leaf_offsets`` / ``leaf_items``) resolving each complete path to
+  its ascending item-id list.
+* ``semantic_decode`` — beam search over the m codebooks reusing
+  ``jpq.partial_scores`` as the per-step logits (``part[:, j, :]``
+  slices; no new kernel — the per-step ``[B, beams, b]`` gather is the
+  ``semantic_decode`` benchmark's named target).  Invalid continuations
+  are masked to −inf, so every emitted path resolves to ≥ 1 real item.
+  Beam scores accumulate in the SAME left-to-right fp32 chain as
+  ``jpq.logits`` (step 0 takes the partial-score slice directly — no
+  ``0.0 + x``, which would flip −0.0 → +0.0), so with
+  ``beams >= n_paths`` the search is exhaustive and bit-matches the
+  materialise scorer, values AND tie-broken ids — the exactness oracle
+  ``tests/test_semantic.py`` pins.
+* ``code_xent`` — the matching training objective: per-position code
+  cross-entropy of the target item's code sequence under the same
+  partial-score logits (``models/sequential.py`` exposes it as
+  ``loss="code_ce"`` or as an auxiliary via ``semantic_weight``).
+* the ``"semantic-id"`` scorer registration — claims
+  ``RetrievalSpec(kind="semantic")`` and serves through the UNMODIFIED
+  replica/queue/server stack (docs/engine.md's worked example, now
+  real).
+
+Everything here stays inside ``core/`` (``tests/test_layering.py``):
+the head touches only ``jpq.partial_scores`` and the engine facade.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core import jpq as _jpq
+
+_ID_SENTINEL = np.iinfo(np.int32).max   # junk-slot id: sorts after all
+
+
+# ================================================================ index
+
+@dataclasses.dataclass(frozen=True)
+class CodeIndex:
+    """Trie over a ``[N, m]`` codes table, device-resident.
+
+    ``level_keys[j]`` is the sorted int32 array of valid keys at
+    position j, where a key is ``parent * b + code`` and ``parent`` is
+    the key's index at position j−1 (0 at j=0, so level-0 keys are the
+    codes themselves).  Keys are level-local, hence bounded by
+    ``N * b < 2**31`` — int32 on purpose: the repo never enables x64,
+    so int64 device arrays would silently truncate.
+
+    A complete path's node id at the last level IS its leaf id;
+    ``leaf_items[leaf_offsets[p]:leaf_offsets[p+1]]`` lists the path's
+    item ids in ascending order (code rows are not unique).
+    """
+    level_keys: Tuple[jnp.ndarray, ...]   # m arrays, sorted int32
+    leaf_offsets: jnp.ndarray             # [n_paths + 1] int32 CSR
+    leaf_items: jnp.ndarray               # [N] int32, ascending per leaf
+    n_items: int
+    n_paths: int
+    max_leaf: int
+    m: int
+    b: int
+
+
+def build_code_index(codes, b: int) -> CodeIndex:
+    """Host-build the code-sequence trie from a concrete codes table."""
+    c = np.asarray(codes).astype(np.int64)
+    if c.ndim != 2:
+        raise ValueError(f"codes must be [n_items, m], got shape {c.shape}")
+    N, m = c.shape
+    b = int(b)
+    if N == 0 or m == 0:
+        raise ValueError(f"codes table is empty: shape {c.shape}")
+    if c.min() < 0 or c.max() >= b:
+        raise ValueError(
+            f"codes must lie in [0, {b}): found range "
+            f"[{c.min()}, {c.max()}]")
+    if N * b >= 2 ** 31:
+        raise ValueError(
+            f"trie keys (node*b + code) must fit int32 — x64 is off, an "
+            f"int64 device array would silently truncate — but "
+            f"n_items*b = {N}*{b} >= 2**31; shard the catalogue first")
+    # lexsort rows by columns 0..m-1; stable, so equal rows keep
+    # ascending original-id order — which makes each leaf's item list
+    # ascending for free
+    order = np.lexsort(c.T[::-1])
+    sc = c[order]
+    level_np: List[np.ndarray] = []
+    parent = np.zeros(N, dtype=np.int64)
+    for j in range(m):
+        key = parent * b + sc[:, j]
+        uniq, parent = np.unique(key, return_inverse=True)
+        # rows are lex-sorted, so uniq (sorted by construction) walks the
+        # level's nodes in sweep order and parent ids stay < N
+        level_np.append(uniq.astype(np.int32))
+    counts = np.bincount(parent, minlength=len(level_np[-1]))
+    offsets = np.zeros(len(counts) + 1, dtype=np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    # the builder may be reached from inside a jit trace (the replica's
+    # dispatch closes over concrete params and builds lazily on first
+    # call) — materialise the device arrays eagerly, or they'd be staged
+    # as that trace's constants and leak as tracers through the cache
+    with jax.ensure_compile_time_eval():
+        return CodeIndex(
+            level_keys=tuple(jnp.asarray(u) for u in level_np),
+            leaf_offsets=jnp.asarray(offsets),
+            leaf_items=jnp.asarray(order.astype(np.int32)),
+            n_items=int(N), n_paths=int(len(counts)),
+            max_leaf=int(counts.max()), m=int(m), b=b)
+
+
+# Small id-keyed cache so per-request scorer calls reuse one host build
+# per codes table.  Holding the codes array itself keeps its id() from
+# being recycled while the entry lives.
+_INDEX_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_INDEX_CACHE_MAX = 8
+
+
+def index_for(codes, b: int) -> CodeIndex:
+    """Cached ``build_code_index`` keyed on the codes array identity."""
+    if isinstance(codes, jax.core.Tracer):
+        raise ValueError(
+            "semantic-ID decoding needs a CONCRETE codes table to build "
+            "its trie (the index is host-built and closed over per "
+            "compiled dispatch) — bind params on the engine instead of "
+            "passing them as a traced argument")
+    key = (id(codes), tuple(np.shape(codes)), int(b))
+    hit = _INDEX_CACHE.get(key)
+    if hit is not None:
+        _INDEX_CACHE.move_to_end(key)
+        return hit[1]
+    idx = build_code_index(codes, b)
+    _INDEX_CACHE[key] = (codes, idx)
+    while len(_INDEX_CACHE) > _INDEX_CACHE_MAX:
+        _INDEX_CACHE.popitem(last=False)
+    return idx
+
+
+# =============================================================== decode
+
+def _select(sc, node, ok, W: int):
+    """Top-W beams from flattened candidates ([B, C] each).  Columns are
+    padded to W with dead beams when C < W so the loop shape is static."""
+    C = sc.shape[-1]
+    Wk = min(W, C)
+    v, pick = jax.lax.top_k(sc, Wk)
+    n = jnp.take_along_axis(node, pick, axis=-1)
+    a = jnp.take_along_axis(ok, pick, axis=-1)
+    if Wk < W:
+        B = sc.shape[0]
+        pad = W - Wk
+        v = jnp.concatenate(
+            [v, jnp.full((B, pad), -jnp.inf, v.dtype)], axis=-1)
+        n = jnp.concatenate(
+            [n, jnp.zeros((B, pad), n.dtype)], axis=-1)
+        a = jnp.concatenate(
+            [a, jnp.zeros((B, pad), jnp.bool_)], axis=-1)
+    return v, n, a
+
+
+def semantic_decode(part, index: CodeIndex, k: int,
+                    beams: Optional[int] = None):
+    """Constrained beam search over the m codebooks.
+
+    ``part`` is ``jpq.partial_scores(p, h)`` — ``[B, m, b]`` fp32.
+    Returns ``(values, ids)`` of width ``min(k, n_items)``, ordered by
+    the bit-level (value desc, id asc) total order.  ``beams=None`` (or
+    any ``beams >= index.n_paths``) is the exhaustive mode: every valid
+    path stays alive, so results bit-match the materialise scorer.
+    """
+    if part.ndim != 3 or part.shape[1] != index.m \
+            or part.shape[2] != index.b:
+        raise ValueError(
+            f"part must be [B, m={index.m}, b={index.b}] "
+            f"(jpq.partial_scores output), got {part.shape}")
+    B, m, b = part.shape
+    n_paths = index.n_paths
+    W = n_paths if beams is None else max(1, min(int(beams), n_paths))
+    k_eff = min(int(k), index.n_items)
+
+    # -- step 0: which of the b codes start a valid path?
+    lk0 = index.level_keys[0]
+    n0 = lk0.shape[0]
+    keys0 = jnp.arange(b, dtype=jnp.int32)
+    pos0 = jnp.searchsorted(lk0, keys0).astype(jnp.int32)
+    ok0 = (pos0 < n0) & (lk0[jnp.clip(pos0, 0, n0 - 1)] == keys0)
+    # take the partial-score slice directly: 0.0 + part would flip any
+    # −0.0 to +0.0 and break the bit-match with jpq.logits
+    sc0 = jnp.where(ok0[None, :], part[:, 0, :], -jnp.inf)
+    node0 = jnp.broadcast_to(pos0[None, :], (B, b))
+    ok0 = jnp.broadcast_to(ok0[None, :], (B, b))
+    score, node, alive = _select(sc0, node0, ok0, W)
+
+    # -- steps 1..m-1: extend every alive beam by all b codes
+    for j in range(1, m):
+        lkj = index.level_keys[j]
+        nj = lkj.shape[0]
+        cand = node[..., None] * b + jnp.arange(b, dtype=jnp.int32)
+        # dead beams get key −1: level keys are all >= 0, so it can
+        # never alias a live node's child
+        keys = jnp.where(alive[..., None], cand, jnp.int32(-1))
+        pos = jnp.searchsorted(lkj, keys).astype(jnp.int32)
+        ok = (pos < nj) & (lkj[jnp.clip(pos, 0, nj - 1)] == keys)
+        # the per-step [B, W, b] gather — the semantic_decode
+        # benchmark's named target
+        sc = jnp.where(ok, score[..., None] + part[:, j, :][:, None, :],
+                       -jnp.inf)
+        score, node, alive = _select(
+            sc.reshape(B, W * b), pos.reshape(B, W * b),
+            ok.reshape(B, W * b), W)
+
+    # -- resolve surviving paths to item ids via the leaf CSR.  Each
+    # leaf contributes at most w = min(max_leaf, k) items: items beyond
+    # w share the leaf's value with a LARGER id, so >= w <= k items of
+    # the same leaf precede them in the total order — dropping them
+    # cannot change the top-k
+    w = max(1, min(index.max_leaf, k_eff))
+    offs = index.leaf_offsets[jnp.clip(node, 0, n_paths)]
+    lens = index.leaf_offsets[jnp.clip(node + 1, 0, n_paths)] - offs
+    idx = offs[..., None] + jnp.arange(w, dtype=jnp.int32)      # [B, W, w]
+    ok_it = (jnp.arange(w) < lens[..., None]) & alive[..., None]
+    items = index.leaf_items[jnp.clip(idx, 0, index.n_items - 1)]
+    vals = jnp.where(ok_it, score[..., None], -jnp.inf)
+    ids = jnp.where(ok_it, items, jnp.int32(_ID_SENTINEL))
+    return _engine.rerank_candidates(
+        vals.reshape(B, W * w), ids.reshape(B, W * w), k_eff)
+
+
+# ====================================================== training head
+
+def code_xent(p, h, item_ids):
+    """Per-position code cross-entropy of the target items' sequences.
+
+    ``h [..., d]`` hidden states, ``item_ids [...]`` target rows in the
+    codes table.  Returns ``[...]`` — the sum over the m positions of
+    ``-log softmax(part[j])[codes[item, j]]``, i.e. the NLL of decoding
+    the target's code sequence under the same per-step logits
+    ``semantic_decode`` searches.  Teacher forcing is implicit: position
+    j's logits condition on h, not on sampled prefixes, matching the
+    factorised scorer.
+    """
+    part = _jpq.partial_scores(p, h)                       # [..., m, b]
+    t = jnp.take(p["codes"].value, item_ids, axis=0).astype(jnp.int32)
+    lse = jax.scipy.special.logsumexp(part, axis=-1)       # [..., m]
+    picked = jnp.take_along_axis(part, t[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - picked, axis=-1)
+
+
+# ============================================================== scorer
+
+def _semantic_scorer(eng, p, h, floor):
+    """Registry strategy for ``RetrievalSpec(kind="semantic")``."""
+    spec = eng.spec
+    if floor is not None:
+        raise ValueError(
+            "warm floors are pruned-JPQ-fused-path features: semantic "
+            "decoding has no pruning threshold to seed — drop the "
+            "floor or serve kind='jpq' with a prune policy")
+    if spec.prune or eng.prune is not None:
+        raise ValueError(
+            "pruning is a fused-JPQ-path feature (it skips CODE tiles); "
+            "the semantic head walks the code trie instead — use "
+            "prune=False with kind='semantic'")
+    emb = eng.emb
+    if emb is None or getattr(getattr(emb, "cfg", None), "kind", None) \
+            != "jpq":
+        raise ValueError(
+            "the semantic-ID head decodes JPQ code sequences — bind a "
+            "kind='jpq' embedding on the engine (got "
+            f"{getattr(getattr(emb, 'cfg', None), 'kind', None)!r})")
+    codes = p["codes"].value
+    idx = index_for(codes, int(emb.cfg.b))
+    part = _jpq.partial_scores(p, h)
+    beams = spec.beams if spec.beams is not None else max(32, 4 * spec.k)
+    return semantic_decode(part, idx, spec.k, beams=beams)
+
+
+_engine.register_scorer(
+    # front (the default): the built-in materialise entry claims every
+    # non-"jpq" kind, so the semantic head must be consulted first
+    "semantic-id",
+    lambda s: s.kind == "semantic",
+    _semantic_scorer)

@@ -129,10 +129,17 @@ def retrieve_topk(emb, p, h, *, k: int, fused: bool = True,
     now the engine's scorer registry (docs/engine.md).  Unsupported
     knob combinations raise ``ValueError`` from the spec / strategy
     (they used to be bare asserts, stripped under ``python -O``).
+
+    ``warm`` here is a per-request FLOOR (a traced value), so the spec
+    records the warm policy as decay 0.0 — "externally managed floor,
+    no EMA" — rather than silently recording ``warm=None`` while a
+    floor is served.  An undeliverable floor (non-pruned path) raises
+    from ``spec_for`` instead of being dropped.
     """
     from repro.core import engine as _engine
     spec = _engine.spec_for(emb, k=k, fused=fused, block_n=block_n,
                             backend=backend, prune=prune, perm=perm,
+                            warm_decay=0.0 if warm is not None else None,
                             stats=return_stats)
     eng = _engine.RetrievalEngine(spec, emb, p)
     if spec.prune:

@@ -240,6 +240,10 @@ def main():
     lats = np.asarray(lats)
     mode = ("fused" if args.fused else "materialise") \
         if engine_path else "serve"
+    if engine_path and spec.kind == "semantic":
+        # generative head: constrained beam decode over the codebooks
+        mode = "semantic" + ("" if spec.beams is None
+                             else f"@{spec.beams}")
     # label what actually ran: `pruned` is only set when the arch's
     # embedding is JPQ and the fused path took the PruneState — argv
     # alone would claim pruning for archs that fell through to the

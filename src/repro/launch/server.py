@@ -199,6 +199,8 @@ def _config_name(args, spec) -> str:
     """Label what actually RUNS (the resolved spec), not the argv: a
     --no-fused or non-JPQ run drops prune/perm/warm in resolution."""
     name = "queue" if args.max_batch > 1 else "sync-loop"
+    if spec.kind == "semantic":
+        name += "+semantic"
     if spec.prune:
         name += "+prune"
     if spec.perm != "none":

@@ -150,6 +150,8 @@ class TwoTower:
         from repro.core import engine as _engine
         spec = _engine.spec_for(self.emb, k=top_k, fused=fused,
                                 prune=prune, perm=perm,
+                                warm_decay=0.0 if warm is not None
+                                else None,
                                 stats=return_stats)
         bound = self.bind_engine(p, spec)
         if spec.prune:

@@ -40,7 +40,8 @@ class SeqRecConfig:
     n_heads: int = 4
     d_ff: int = 1024
     embedding: Optional[EmbeddingConfig] = None   # None -> full, d=d_model
-    loss: str = "full_ce"         # full_ce | sampled_bce
+    loss: str = "full_ce"         # full_ce | sampled_bce | code_ce
+    semantic_weight: float = 0.0  # auxiliary code-CE weight (jpq only)
     n_negatives: int = 1
     dropout: float = 0.0
     mask_prob: float = 0.2        # bert4rec masking rate
@@ -82,6 +83,13 @@ class SeqRecModel:
 
     def __init__(self, cfg: SeqRecConfig, codes=None):
         self.cfg = cfg
+        if (cfg.loss == "code_ce" or cfg.semantic_weight > 0.0) \
+                and cfg.emb_cfg().kind != "jpq":
+            raise ValueError(
+                f"the semantic-ID objective (loss='code_ce' / "
+                f"semantic_weight > 0) is per-position cross-entropy "
+                f"over JPQ code sequences — it needs a kind='jpq' "
+                f"embedding, got {cfg.emb_cfg().kind!r}")
         self.emb = make_embedding(cfg.emb_cfg())
         self._codes = codes
         self.attn_cfg = AttnConfig(
@@ -160,6 +168,8 @@ class SeqRecModel:
             logits = self._mask_special(logits)
             ce = _xent(logits, labels)
             loss = jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1)
+        elif cfg.loss == "code_ce":                     # semantic head
+            loss = self._code_loss(p, h, labels, valid)
         else:                                           # sampled_bce
             neg = batch["negatives"]                    # [B,S,K]
             pos_e = self.emb.lookup(p["item_emb"], labels)
@@ -170,17 +180,38 @@ class SeqRecModel:
             ln = jnp.sum(jax.nn.log_sigmoid(-neg_s), -1)
             loss = -jnp.sum((lp + ln) * valid) / jnp.maximum(
                 jnp.sum(valid), 1)
+        if cfg.semantic_weight > 0.0 and cfg.loss != "code_ce":
+            aux = self._code_loss(p, h, labels, valid)
+            loss = loss + cfg.semantic_weight * aux
+            return loss, {"loss": loss, "code_ce": aux}
         return loss, {"loss": loss}
 
     def _masked_lm_loss(self, p, batch, rng):
         """BERT4Rec: batch carries pre-masked inputs + recovery targets."""
         seq, targets = batch["seq"], batch["targets"]   # targets 0 = unmasked
         h = self.encode(p, seq, rng=rng)
-        logits = self._mask_special(self.emb.logits(p["item_emb"], h))
         valid = targets > 0
+        if self.cfg.loss == "code_ce":                  # semantic head
+            loss = self._code_loss(p, h, targets, valid)
+            return loss, {"loss": loss}
+        logits = self._mask_special(self.emb.logits(p["item_emb"], h))
         ce = _xent(logits, targets)
         loss = jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1)
+        if self.cfg.semantic_weight > 0.0:
+            aux = self._code_loss(p, h, targets, valid)
+            loss = loss + self.cfg.semantic_weight * aux
+            return loss, {"loss": loss, "code_ce": aux}
         return loss, {"loss": loss}
+
+    def _code_loss(self, p, h, targets, valid):
+        """Per-position code cross-entropy of the target items' code
+        sequences (core.semantic.code_xent) — the generative head's
+        training signal.  Teacher-forced per position: each code
+        position's logits are the same ``partial_scores`` slices
+        ``semantic_decode`` beam-searches at serve time."""
+        from repro.core import semantic as _semantic
+        ce = _semantic.code_xent(p["item_emb"], h, targets)   # [B, S]
+        return jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1)
 
     def _mask_special(self, logits):
         """Never rank pad / [MASK] rows."""
@@ -256,6 +287,8 @@ class SeqRecModel:
         spec = _engine.spec_for(self.emb, k=k, fused=fused,
                                 block_n=block_n, backend=backend,
                                 prune=prune, perm=perm,
+                                warm_decay=0.0 if warm is not None
+                                else None,
                                 stats=return_stats)
         bound = self.bind_engine(p, spec)
         if bound.engine.spec.prune:

@@ -132,6 +132,60 @@ class TestAssignments:
                             n_users=nu, seed=7)
         np.testing.assert_array_equal(c1, c2)
 
+    def test_seed_streams_are_spawned_children(self):
+        """RNG-discipline pin (deliberate bitstream change): every
+        stage's stream is a ``SeedSequence(seed).spawn`` child, not the
+        raw integer — seeding embeddings and discretise noise with the
+        SAME integer made the noise replay the embedding bitstream."""
+        for seed in (0, 7):
+            embed_ss, disc_ss = np.random.SeedSequence(seed).spawn(2)
+            got = build_codebook("random", 50, 3, 16, seed=seed)
+            want = np.random.default_rng(embed_ss).integers(
+                0, 16, (50, 3), dtype=np.int32)
+            np.testing.assert_array_equal(got, want)
+            # the two children never collapse to one stream
+            a = np.random.default_rng(embed_ss).integers(0, 2**30, 8)
+            b = np.random.default_rng(disc_ss).integers(0, 2**30, 8)
+            assert not np.array_equal(a, b)
+
+    def test_discretise_stream_independent_of_embedding_stream(self):
+        """svd's code draw must not change if ONLY the discretise
+        child's consumption pattern would have (the old same-integer
+        seeding coupled them); equivalently, the svd pipeline equals
+        explicitly re-running its two stages on the spawned children."""
+        from repro.core.assign import _discretise, svd_item_embeddings
+        u, i, nu, ni = self._interactions()
+        embed_ss, disc_ss = np.random.SeedSequence(3).spawn(2)
+        emb = svd_item_embeddings(u, i, nu, ni, 4, seed=embed_ss)
+        want = _discretise(emb, 8, np.random.default_rng(disc_ss))
+        got = build_codebook("svd", ni, 4, 8, interactions=(u, i),
+                            n_users=nu, seed=3)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestPopularityPermutationValidation:
+    def test_valid_counts_pass(self):
+        from repro.core.assign import popularity_permutation
+        perm = popularity_permutation(np.array([1.0, 5.0, 5.0, 0.0]))
+        np.testing.assert_array_equal(perm, [1, 2, 0, 3])  # stable ties
+
+    def test_rejects_nan(self):
+        from repro.core.assign import popularity_permutation
+        with pytest.raises(ValueError, match="NaN"):
+            popularity_permutation(np.array([1.0, np.nan, 2.0]))
+
+    def test_rejects_negative(self):
+        from repro.core.assign import popularity_permutation
+        with pytest.raises(ValueError, match="negative"):
+            popularity_permutation(np.array([3, -1, 2]))
+
+    def test_rejects_length_mismatch_and_ndim(self):
+        from repro.core.assign import popularity_permutation
+        with pytest.raises(ValueError, match="n_items"):
+            popularity_permutation(np.arange(5), n_items=6)
+        with pytest.raises(ValueError, match="1-D"):
+            popularity_permutation(np.ones((4, 2)))
+
 
 class TestQR:
     @given(st.integers(min_value=2, max_value=500))

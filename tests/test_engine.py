@@ -192,6 +192,7 @@ def spec_fields(draw):
         "warm": (draw(st.sampled_from([None, 0.5, 0.9]))
                  if prune else None),
         "stats": draw(st.booleans()) and prune,
+        "beams": draw(st.sampled_from([None, 16, 64])),
     }
 
 
@@ -232,6 +233,7 @@ class TestSpecSemantics:
             dataclasses.replace(base, warm=0.5),
             dataclasses.replace(base, warm=None),
             dataclasses.replace(base, stats=False),
+            dataclasses.replace(base, beams=32),
         ]
         cache = JitCache()
         entries = [cache.get(s, 3, 16, object)
@@ -258,6 +260,8 @@ class TestSpecSemantics:
             RetrievalSpec(stats=True, prune=False)
         with pytest.raises(ValueError, match="stats"):
             RetrievalSpec(stats=True, prune=True, fused=False, kind="full")
+        with pytest.raises(ValueError, match="beams"):
+            RetrievalSpec(kind="semantic", beams=0)
 
     def test_unknown_spec_has_no_scorer(self):
         from repro.core.engine import RetrievalSpec, resolve_scorer
@@ -318,6 +322,88 @@ class TestKnobValidation:
         from repro.serve.replica import Replica
         with pytest.raises(TypeError, match="bind_engine"):
             Replica(object(), {}, k=5)
+
+
+# =============================================== warm-policy round-trip
+
+class TestWarmRoundTrip:
+    """Shim-bug regression: the ``retrieve_topk`` shims accepted a
+    per-request warm floor but never recorded the warm POLICY in the
+    spec they built (``spec_for`` has ``warm_decay``; the shims didn't
+    pass it) — so a warm-floored request served under a spec claiming
+    ``warm=None``.  Now a served floor surfaces as ``warm=0.0``
+    ("externally managed floor, no EMA") and an undeliverable floor
+    raises from ``spec_for`` instead of being silently dropped."""
+
+    def test_spec_for_forwards_warm_decay(self):
+        from repro.core import engine
+        spec = engine.spec_for("jpq", k=K, prune=True, warm_decay=0.7)
+        assert spec.prune and spec.warm == 0.7
+
+    @pytest.mark.parametrize("kwargs", [
+        dict(kind="jpq", prune=None),            # unpruned jpq
+        dict(kind="jpq", prune=True, fused=False),  # non-fused
+        dict(kind="full", prune=True),           # non-jpq never prunes
+    ])
+    def test_spec_for_undeliverable_warm_raises(self, kwargs):
+        from repro.core import engine
+        kind = kwargs.pop("kind")
+        with pytest.raises(ValueError, match="pruned-JPQ-fused-path"):
+            engine.spec_for(kind, k=K, warm_decay=0.5, **kwargs)
+
+    def test_shim_roundtrip_warm_stats_prune_combos(self):
+        """Capture the spec the shim builds for every deliverable
+        warm x return_stats combo on the pruned path: a served floor
+        must surface as warm=0.0, stats as stats=True, and the path
+        must still delegate to the fused-JPQ scorer with bit-exact
+        results (the unpruned x {stats, warm} combos raise — pinned by
+        test_shim_stats_unpruned_raises / the class above)."""
+        from repro.core import engine, serve
+        emb, p, h = _make("jpq")
+        ref = _reference(emb, p, h)
+        floor = np.full((B,), -np.inf, np.float32)
+        captured = []
+
+        def capture(eng, pp, hh, fl):
+            captured.append((eng.spec, fl is not None))
+            return engine._jpq_fused_scorer(eng, pp, hh, fl)
+
+        engine.register_scorer(
+            "capture", lambda s: s.kind == "jpq" and s.prune, capture)
+        try:
+            for warm in (None, floor):
+                for stats in (False, True):
+                    out = serve.retrieve_topk(emb, p, h, k=K, prune=True,
+                                              warm=warm,
+                                              return_stats=stats)
+                    _assert_same(out, ref,
+                                 f"shim warm={warm is not None} "
+                                 f"stats={stats}")
+                    assert len(out) == (3 if stats else 2)
+                    spec, saw_floor = captured[-1]
+                    assert spec.prune and spec.kind == "jpq"
+                    assert spec.warm == \
+                        (0.0 if warm is not None else None), \
+                        "served floor not recorded in the spec"
+                    assert spec.stats == stats
+                    assert saw_floor == (warm is not None)
+        finally:
+            engine.unregister_scorer("capture")
+        assert len(captured) == 4
+
+    def test_model_shim_undeliverable_warm_raises(self):
+        """The model-level shim copies reconcile the same way."""
+        from repro.configs import get_bundle
+        model, batch, rng = get_bundle(
+            "two-tower-retrieval-jpq").make_smoke()
+        params = model.init_params(rng)
+        req = {k: v for k, v in batch.items()
+               if k not in ("label", "labels")}
+        # spec_for raises before the floor is ever traced, so any
+        # non-None floor exercises the guard
+        floor = np.zeros((4,), np.float32)
+        with pytest.raises(ValueError, match="pruned-JPQ-fused-path"):
+            model.retrieve(params, req, top_k=5, fused=False, warm=floor)
 
 
 # ========================================== extension seam + hot-swap
@@ -434,6 +520,8 @@ class TestCliSpecParity:
         ["--prune", "--warm", "0.8"],
         ["--prune", "--warm-theta", "0.7", "--perm"],
         ["--no-prune", "--top-k", "3"],
+        ["--head", "semantic", "--beams", "48"],
+        ["--head", "semantic", "--prune", "--warm"],  # cluster degrades
     ]
 
     def test_both_clis_resolve_identical_specs(self):

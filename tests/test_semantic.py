@@ -1,0 +1,398 @@
+"""Semantic-ID generative retrieval head (core/semantic.py).
+
+The oracle contract: with ``beams >= n_paths`` the constrained beam
+decode is EXHAUSTIVE, and its results bit-match the materialise scorer
+(``lax.top_k`` over ``emb.logits``) — values AND tie-broken ids —
+including duplicate code rows (several items on one code path) and the
+score ties they induce.  Narrow beams stay *sound*: every emitted id is
+a real catalogue item whose value equals its materialised score at the
+bit level (the trie masks invalid continuations to −inf, so no decoded
+path can resolve to zero items).
+
+Plus: the trie index vs a numpy brute force, the ``"semantic-id"``
+scorer guards, serving end-to-end through the UNMODIFIED replica/queue/
+server stack (the extension seam, now with a production head), the
+SeqRecModel serve-protocol parity (`bind_engine` == top-k of
+``score_last``), and the ``code_ce`` training objective through
+``train/loop.py``.
+
+CI runs this file in the kernel-parity step (exactness oracles before
+tier-1).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+B, N, D, M, CB = 5, 257, 16, 4, 8      # CB = codes per position (b)
+K = 7
+
+
+def _make(seed=0, n=N, m=M, b=CB, dupes=True):
+    """JPQ embedding over a codes table WITH duplicate rows."""
+    import jax
+    from repro.core import EmbeddingConfig, make_embedding
+    from repro.nn.module import KeyGen
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, b, size=(n, m))
+    if dupes and n >= 8:
+        codes[n // 3] = codes[1]           # shared paths -> score ties
+        codes[n - 2] = codes[1]
+        codes[n // 2] = codes[4]
+    emb = make_embedding(EmbeddingConfig(n_items=n, d=D, kind="jpq",
+                                         m=m, b=b))
+    p = emb.init(KeyGen(0), codes=codes)
+    h = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, D))
+    return emb, p, h, np.asarray(codes)
+
+
+# ================================================================ index
+
+
+class TestCodeIndex:
+    def test_index_matches_numpy_bruteforce(self):
+        from repro.core.semantic import build_code_index
+        _, _, _, codes = _make()
+        idx = build_code_index(codes, CB)
+        rows = [tuple(r) for r in codes]
+        # per-level valid prefixes
+        for j in range(M):
+            want = len({r[:j + 1] for r in rows})
+            assert idx.level_keys[j].shape[0] == want
+        # leaves: sorted unique rows; each leaf's items ascending
+        uniq = sorted(set(rows))
+        assert idx.n_paths == len(uniq)
+        offs = np.asarray(idx.leaf_offsets)
+        items = np.asarray(idx.leaf_items)
+        for pth, row in enumerate(uniq):
+            want_ids = [i for i, r in enumerate(rows) if r == row]
+            got = items[offs[pth]:offs[pth + 1]].tolist()
+            assert got == want_ids, f"leaf {row} resolved wrong items"
+        assert idx.max_leaf == max(
+            offs[1:] - offs[:-1]) == max(
+            len([1 for r in rows if r == u]) for u in uniq)
+
+    def test_index_validation(self):
+        from repro.core.semantic import build_code_index
+        with pytest.raises(ValueError, match=r"\[n_items, m\]"):
+            build_code_index(np.zeros(4, np.int32), 4)
+        with pytest.raises(ValueError, match="lie in"):
+            build_code_index(np.array([[0, 7]]), 4)   # code >= b
+        with pytest.raises(ValueError, match="lie in"):
+            build_code_index(np.array([[-1, 0]]), 4)
+        with pytest.raises(ValueError, match="int32"):
+            # N*b crosses 2**31: int32 keys would overflow (x64 is off,
+            # so an int64 device array is not an option)
+            build_code_index(np.array([[0], [1]]), 2 ** 30)
+
+    def test_index_cache_identity_and_tracer_guard(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.semantic import index_for
+        _, _, _, codes = _make()
+        codes = jnp.asarray(codes)
+        a = index_for(codes, CB)
+        assert index_for(codes, CB) is a          # id-keyed cache hit
+        with pytest.raises(ValueError, match="CONCRETE"):
+            jax.jit(lambda c: index_for(c, CB))(codes)
+
+
+# =============================================== decode vs the oracle
+
+
+class TestDecodeOracle:
+    def _ref(self, emb, p, h, k):
+        import jax
+        return jax.lax.top_k(emb.logits(p, h), k)
+
+    @pytest.mark.parametrize("k", [1, K, 40, N])
+    def test_exhaustive_bitmatches_materialise(self, k):
+        """beams >= n_paths: values AND tie-broken ids equal lax.top_k
+        over the materialised scores — ties from duplicate code rows
+        included.  k spans 1, typical, > max_leaf, and the whole
+        catalogue."""
+        import jax.numpy as jnp
+        from repro.core import jpq, semantic
+        emb, p, h, codes = _make()
+        idx = semantic.build_code_index(codes, CB)
+        part = jpq.partial_scores(p, h)
+        rv, ri = self._ref(emb, p, h, k)
+        for beams in (None, idx.n_paths, idx.n_paths + 100):
+            v, i = semantic.semantic_decode(part, idx, k, beams=beams)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+            assert (np.asarray(v).view(np.int32)
+                    == np.asarray(rv).view(np.int32)).all(), \
+                f"values not bit-identical at beams={beams}"
+            assert v.dtype == jnp.float32
+
+    def test_narrow_beams_sound(self):
+        """Constrained decode never emits a zero-item path: with W
+        beams alive every candidate id is a real item and its value is
+        the item's materialised score, bit-for-bit; ids are distinct."""
+        from repro.core import jpq, semantic
+        emb, p, h, codes = _make()
+        idx = semantic.build_code_index(codes, CB)
+        part = jpq.partial_scores(p, h)
+        scores = np.asarray(emb.logits(p, h))
+        sent = np.iinfo(np.int32).max
+        for beams, k in [(4, 3), (8, K), (1, 1), (16, 60)]:
+            v, i = semantic.semantic_decode(part, idx, k, beams=beams)
+            v, i = np.asarray(v), np.asarray(i)
+            for bi in range(B):
+                real = i[bi] != sent
+                # a beam is a valid path and a valid path has >= 1
+                # item, so >= min(beams, k) real candidates exist
+                assert real.sum() >= min(beams, k)
+                ids = i[bi][real]
+                assert len(set(ids.tolist())) == len(ids), \
+                    "duplicate item emitted"
+                assert (v[bi][real].view(np.int32) ==
+                        scores[bi][ids].view(np.int32)).all(), \
+                    "emitted value is not the item's exact score"
+                assert (v[bi][~real] == -np.inf).all()
+
+    def test_single_position_codebook(self):
+        """m=1 degenerates to a masked top-k over level-0 codes."""
+        from repro.core import jpq, semantic
+        emb, p, h, codes = _make(n=40, m=1, b=16)
+        idx = semantic.build_code_index(codes, 16)
+        v, i = semantic.semantic_decode(jpq.partial_scores(p, h), idx, 5)
+        rv, ri = self._ref(emb, p, h, 5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+# ======================================================= scorer + spec
+
+
+class TestSemanticScorer:
+    def test_engine_resolves_semantic_head(self):
+        from repro.core import engine
+        spec = engine.RetrievalSpec(kind="semantic", k=K)
+        emb, p, h, _ = _make()
+        eng = engine.RetrievalEngine(spec, emb, p)
+        assert eng.strategy == "semantic-id"
+        import jax
+        rv, ri = jax.lax.top_k(emb.logits(p, h), K)
+        # exhaustive spec: bit-match through the engine facade, jitted
+        # the way the replica jits it (params closed over)
+        ex = dataclasses.replace(spec, beams=N)
+        eng = engine.RetrievalEngine(ex, emb, p)
+        v, i = jax.jit(lambda hh: eng.retrieve(hh))(h)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+    def test_scorer_guards(self):
+        from repro.core import engine
+        emb, p, h, _ = _make()
+        eng = engine.RetrievalEngine(
+            engine.RetrievalSpec(kind="semantic", k=K), emb, p)
+        with pytest.raises(ValueError, match="floor"):
+            eng.retrieve(h, floor=np.zeros((B,), np.float32))
+        from repro.core import EmbeddingConfig, make_embedding
+        from repro.nn.module import KeyGen
+        full = make_embedding(EmbeddingConfig(n_items=N, d=D, kind="full"))
+        fp = full.init(KeyGen(0))
+        eng = engine.RetrievalEngine(
+            engine.RetrievalSpec(kind="semantic", k=K), full, fp)
+        with pytest.raises(ValueError, match="kind='jpq'"):
+            eng.retrieve(h)
+
+    def test_spec_beams_validation_and_cache_key(self):
+        from repro.core.engine import JitCache, RetrievalSpec
+        with pytest.raises(ValueError, match="beams"):
+            RetrievalSpec(kind="semantic", k=K, beams=0)
+        a = RetrievalSpec(kind="semantic", k=K, beams=32)
+        b = RetrievalSpec(kind="semantic", k=K, beams=64)
+        cache = JitCache()
+        assert cache.get(a, 0, 8, object) is not cache.get(b, 0, 8, object)
+
+
+# ================================== serve protocol + extension seam
+
+
+def _smoke_server(spec, *, max_batch=4):
+    """Mirror of test_engine._smoke_server, pinned unpruned (the
+    semantic head, like any non-jpq kind, serves prune=False)."""
+    from repro.configs import get_bundle
+    from repro.serve import (CatalogueRegistry, Replica, ReplicaPool,
+                             RetrievalServer)
+    model, _, rng = get_bundle("two-tower-retrieval-jpq").make_smoke()
+    params = model.init_params(rng)
+    codes = params["item_emb"]["codes"].value
+    hist_len = int(model.cfg.hist_len)
+    registry = CatalogueRegistry(prune=False)
+    registry.publish(codes, int(model.emb.cfg.b))
+    pool = ReplicaPool([Replica(model, params, k=int(spec.k), spec=spec)])
+    server = RetrievalServer(pool, registry, max_batch=max_batch,
+                             max_delay=0.0, buckets=(hist_len,))
+    return model, params, server
+
+
+class TestSemanticServing:
+    def test_seqrec_bind_engine_matches_score_last(self):
+        """SeqRec serve protocol over the semantic head: pad/[MASK]
+        demotion + total-order re-rank == lax.top_k(score_last) at
+        exhaustive beams — same contract as the fused path."""
+        import jax
+        from repro.core import engine
+        from repro.core import EmbeddingConfig
+        from repro.models.sequential import SeqRecConfig, SeqRecModel
+        rng = np.random.default_rng(3)
+        cfg = SeqRecConfig(
+            arch="bert4rec", n_items=60, max_len=8, d_model=16,
+            n_layers=1, n_heads=2, d_ff=32,
+            embedding=EmbeddingConfig(0, 0, kind="jpq", m=2, b=8))
+        codes = rng.integers(0, 8, size=(cfg.n_rows, 2))
+        model = SeqRecModel(cfg, codes=codes)
+        p = model.init_params(jax.random.PRNGKey(0))
+        seq = rng.integers(1, cfg.n_items + 1, size=(3, 8)).astype(np.int32)
+        spec = engine.RetrievalSpec(kind="semantic", k=5,
+                                    beams=cfg.n_rows)
+        bound = model.bind_engine(p, spec)
+        v, i = bound.retrieve(seq)
+        rv, ri = jax.lax.top_k(model.score_last(p, seq), 5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+    def test_semantic_spec_serves_end_to_end(self):
+        """The acceptance seam: a RetrievalSpec(kind='semantic') serves
+        through serve/replica.py + RetrievalServer with NO serve-stack
+        change, bit-equal to the bound engine at the replica's compiled
+        shape."""
+        import jax
+        from repro.core import engine
+        from repro.serve.queue import Batch, Request
+        spec = engine.RetrievalSpec(kind="semantic", k=5, beams=64)
+        model, params, server = _smoke_server(spec)
+        hist = np.arange(1, 9, dtype=np.int32)
+        rid = server.submit(hist)
+        server.drain()
+        res = server.result(rid)
+        sent = np.iinfo(np.int32).max
+        assert (np.asarray(res.ids) != sent).all(), \
+            "semantic serve emitted a non-item candidate in its top-k"
+        hist_len = int(model.cfg.hist_len)
+        padded = Batch([Request(rid, hist)], hist_len,
+                       server.queue.max_batch).padded_hist()
+        bound = model.bind_engine(params, spec)
+        ref_v, ref_i = jax.jit(bound.retrieve)(padded)
+        np.testing.assert_array_equal(res.ids, np.asarray(ref_i)[0])
+        np.testing.assert_array_equal(res.values, np.asarray(ref_v)[0])
+
+    def test_cli_spec_resolution(self):
+        """--head semantic rewrites the spec kind on both CLIs (and
+        degrades the pruning cluster); a non-JPQ base kind raises."""
+        from repro.core import engine
+        from repro.launch import serve as serve_cli
+        from repro.launch import server as server_cli
+        flags = ["--head", "semantic", "--beams", "64", "--prune"]
+        for cli in (serve_cli, server_cli):
+            args = cli.build_parser().parse_args(flags)
+            spec = engine.spec_from_args(args, kind="jpq", k=9)
+            assert spec == engine.RetrievalSpec(
+                kind="semantic", k=9, beams=64, prune=False)
+        args = serve_cli.build_parser().parse_args(["--head", "semantic"])
+        with pytest.raises(ValueError, match="JPQ item embedding"):
+            engine.spec_from_args(args, kind="full")
+
+
+# ========================================================== training
+
+
+class TestCodeCrossEntropy:
+    def test_code_xent_matches_manual_softmax(self):
+        from repro.core import jpq, semantic
+        emb, p, h, codes = _make()
+        ids = np.array([0, 3, N - 1, 1, N // 2])
+        got = np.asarray(semantic.code_xent(p, h, ids))
+        part = np.asarray(jpq.partial_scores(p, h))
+        want = np.zeros(B)
+        for bi in range(B):
+            for j in range(M):
+                lj = part[bi, j] - part[bi, j].max()
+                logp = lj - np.log(np.exp(lj).sum())
+                want[bi] -= logp[codes[ids[bi], j]]
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_code_ce_requires_jpq(self):
+        from repro.models.sequential import SeqRecConfig, SeqRecModel
+        with pytest.raises(ValueError, match="code_ce"):
+            SeqRecModel(SeqRecConfig(arch="sasrec", n_items=20,
+                                     loss="code_ce"))
+        with pytest.raises(ValueError, match="semantic_weight"):
+            SeqRecModel(SeqRecConfig(arch="sasrec", n_items=20,
+                                     semantic_weight=0.1))
+
+    @pytest.mark.parametrize("arch", ["sasrec", "bert4rec"])
+    def test_code_ce_trains_through_loop(self, arch):
+        """loss='code_ce' as a standalone head through train/loop.py:
+        finite decreasing-ish loss, and the trained checkpoint decodes
+        through the semantic head."""
+        import jax
+        from repro.core import EmbeddingConfig, engine
+        from repro.models.sequential import (SeqRecConfig, SeqRecModel,
+                                             mask_batch)
+        from repro.train.loop import TrainConfig, Trainer
+        from repro.train.optimizer import OptConfig
+        n_items, S = 30, 6
+        cfg = SeqRecConfig(
+            arch=arch, n_items=n_items, max_len=S + 1, d_model=8,
+            n_layers=1, n_heads=2, d_ff=16, loss="code_ce",
+            embedding=EmbeddingConfig(0, 0, kind="jpq", m=2, b=4))
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, 4, size=(n_items + 2, 2))
+        model = SeqRecModel(cfg, codes=codes)
+
+        # one FIXED batch every step, so the loss trend is deterministic
+        r = np.random.default_rng(7)
+        seq = r.integers(1, n_items + 1, size=(8, S)).astype(np.int32)
+        if arch == "bert4rec":
+            masked, targets = mask_batch(
+                jax.random.PRNGKey(1), seq, cfg.mask_prob, cfg.mask_id)
+            batch = {"seq": masked, "targets": targets}
+        else:
+            batch = {"seq": seq, "labels": np.roll(seq, -1, 1)}
+
+        def data_fn(step):
+            return batch
+
+        tr = Trainer(model, OptConfig(lr=1e-2, total_steps=6),
+                     TrainConfig(steps=6, batch_size=8, log_every=1,
+                                 eval_every=0, ckpt_every=0), data_fn)
+        params, hist = tr.run(jax.random.PRNGKey(0))
+        losses = [r["loss"] for r in hist if "loss" in r]
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0], "code_ce did not move"
+        # trained checkpoint serves through the semantic head
+        spec = engine.RetrievalSpec(kind="semantic", k=4, beams=16)
+        bound = model.bind_engine(params, spec)
+        v, i = bound.retrieve(np.arange(1, S + 2)[None, :].astype(np.int32))
+        assert np.isfinite(np.asarray(v)).all()
+        assert (np.asarray(i) > 0).all()
+
+    def test_semantic_weight_auxiliary(self):
+        """semantic_weight > 0 adds w * code_ce to the base loss and
+        reports the auxiliary term."""
+        import jax
+        from repro.core import EmbeddingConfig
+        from repro.models.sequential import SeqRecConfig, SeqRecModel
+        n_items = 20
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, 4, size=(n_items + 2, 2))
+        base_cfg = SeqRecConfig(
+            arch="sasrec", n_items=n_items, max_len=6, d_model=8,
+            n_layers=1, n_heads=2, d_ff=16,
+            embedding=EmbeddingConfig(0, 0, kind="jpq", m=2, b=4))
+        seq = rng.integers(1, n_items + 1, size=(4, 5)).astype(np.int32)
+        batch = {"seq": seq, "labels": np.roll(seq, -1, 1)}
+        p = SeqRecModel(base_cfg, codes=codes).init_params(
+            jax.random.PRNGKey(0))
+        base, _ = SeqRecModel(base_cfg, codes=codes).train_loss(p, batch)
+        aux_cfg = dataclasses.replace(base_cfg, semantic_weight=0.5)
+        aux_model = SeqRecModel(aux_cfg, codes=codes)
+        tot, mets = aux_model.train_loss(p, batch)
+        assert "code_ce" in mets
+        np.testing.assert_allclose(
+            np.asarray(tot), np.asarray(base) + 0.5 *
+            np.asarray(mets["code_ce"]), rtol=1e-6)

@@ -579,3 +579,86 @@ class TestRegistry:
             reg.wait()
         with pytest.raises(RuntimeError):    # failed build never swapped
             reg.live()
+
+
+# ===================================================== overlong protocol
+
+
+def _tiny_seqrec():
+    """A directly-constructed bert4rec + JPQ model (no seqrec smoke
+    bundle exists): the arch whose serve protocol appends a [MASK]
+    after the history — the case where truncation ORDER matters."""
+    import jax
+
+    from repro.core import EmbeddingConfig
+    from repro.models.sequential import SeqRecConfig, SeqRecModel
+    cfg = SeqRecConfig(
+        arch="bert4rec", n_items=40, max_len=max(BUCKETS), d_model=16,
+        n_layers=1, n_heads=2, d_ff=32,
+        embedding=EmbeddingConfig(0, 0, kind="jpq", m=2, b=8))
+    codes = np.random.default_rng(5).integers(0, 8, size=(cfg.n_rows, 2))
+    model = SeqRecModel(cfg, codes=codes)
+    return model, model.init_params(jax.random.PRNGKey(2))
+
+
+class TestOverlongProtocol:
+    """An overlong request (history longer than every bucket) must be
+    tail-truncated BEFORE the serve protocol's [MASK] append: the
+    queue's ``padded_hist`` keeps ``hist[-L:]`` and the model then
+    shifts in the [MASK] — appending first and truncating after would
+    serve the same window, and anything else (head-truncation, silent
+    rejection) would not.  Pinned server-vs-direct at the compiled
+    shape, both for the fused-score head and the semantic-ID head."""
+
+    def test_truncate_then_append_equals_append_then_truncate(self):
+        # the protocol identity, in plain numpy: for a FULL bucket row,
+        # shift-left + [MASK] on hist[-L:] == ([MASK]-extended)[-L:]
+        mask = 99
+        hist = np.arange(1, 14, dtype=np.int32)          # len 13
+        for L in BUCKETS:
+            t = hist[-L:]
+            served = np.concatenate([t[1:], [mask]])     # _serve_seq
+            oracle = np.concatenate([hist, [mask]])[-L:]
+            np.testing.assert_array_equal(served, oracle)
+
+    @pytest.mark.parametrize("spec_kw", [
+        dict(kind="jpq"),
+        dict(kind="semantic", beams=64),
+    ])
+    def test_overlong_server_matches_direct_and_score_last(self, spec_kw):
+        import jax
+
+        from repro.core import engine
+        model, params = _tiny_seqrec()
+        spec = engine.RetrievalSpec(k=K, **spec_kw)
+        codes = params["item_emb"]["codes"].value
+        registry = CatalogueRegistry(prune=False)
+        registry.publish(codes, int(model.emb.cfg.b))
+        pool = ReplicaPool([Replica(model, params, k=K, spec=spec)])
+        server = RetrievalServer(pool, registry, max_batch=MAX_BATCH,
+                                 max_delay=0.0, buckets=BUCKETS)
+
+        hist = np.asarray(
+            np.random.default_rng(9).integers(1, 41, size=13), np.int32)
+        assert hist.size > max(BUCKETS)                  # overlong
+        rid = server.submit(hist)
+        server.drain()
+        res = server.result(rid)
+
+        # (a) bit-parity with the request served alone at the replica's
+        # compiled shape (the conformance contract)
+        L = max(BUCKETS)
+        padded = Batch([Request(rid, hist)], L,
+                       server.queue.max_batch).padded_hist()
+        np.testing.assert_array_equal(padded[0], hist[-L:])
+        bound = model.bind_engine(params, spec)
+        ref_v, ref_i = jax.jit(bound.retrieve)(padded)
+        np.testing.assert_array_equal(res.ids, np.asarray(ref_i)[0])
+        np.testing.assert_array_equal(res.values, np.asarray(ref_v)[0])
+
+        # (b) end-to-end protocol oracle: the served top-k IS the
+        # materialised ranking of the truncated window at that shape
+        sv, si = jax.lax.top_k(
+            jax.jit(model.score_last)(params, padded), K)
+        np.testing.assert_array_equal(res.ids, np.asarray(si)[0])
+        np.testing.assert_array_equal(res.values, np.asarray(sv)[0])
