@@ -530,18 +530,18 @@ def grad_exchange(fast: bool = True):
     # leaves replicated and blur the ratio).
     from repro.dist.hlo import collective_bytes
     D, V = jax.device_count(), 8
+    w_fs = {"w": jnp.zeros((1024, 32), jnp.float32),
+            "b": jnp.zeros((3,), jnp.float32)}
+    batch_fs = {"x": jnp.zeros((16, 1024), jnp.float32),
+                "y": jnp.zeros((16, 32), jnp.float32)}
+
+    def loss_fs(vals, bt):
+        pred = bt["x"] @ vals["w"] + vals["b"][:1]
+        return jnp.mean((pred - bt["y"]) ** 2)
+
+    mesh_f = make_host_mesh(D)
+
     if V % D == 0:
-        w_fs = {"w": jnp.zeros((1024, 32), jnp.float32),
-                "b": jnp.zeros((3,), jnp.float32)}
-        batch_fs = {"x": jnp.zeros((16, 1024), jnp.float32),
-                    "y": jnp.zeros((16, 32), jnp.float32)}
-
-        def loss_fs(vals, bt):
-            pred = bt["x"] @ vals["w"] + vals["b"][:1]
-            return jnp.mean((pred - bt["y"]) ** 2)
-
-        mesh_f = make_host_mesh(D)
-
         def _collect_bytes(fn, vals):
             err = compression.zeros_error_state(w_fs, V)
             e_r = jax.tree.map(lambda x: x[np.arange(D)], err)
@@ -576,6 +576,37 @@ def grad_exchange(fast: bool = True):
                  f"dp_allgather_bytes={ag};"
                  f"reduction={ag / max(a2a, 1):.1f}x;"
                  f"payload_bytes={pb}")
+
+    # ---- overlap schedules: serial oracle vs double-buffered dispatch
+    # vs backward-overlapped, dp and fsdp, V in {4, 8} (method int8 —
+    # the schedule only matters when a payload collective is worth
+    # hiding).  All modes dispatch the identical compiled stage pair,
+    # so the wire bytes per step are mode-invariant; the wall column is
+    # the whole point of the row.  Pinned to a 2-device mesh so every
+    # step runs V/2 >= 2 host rounds — on the full bench mesh (D=8,
+    # V=8) there is exactly one round per step and no schedule surface
+    # to measure.
+    D_ov = 2 if jax.device_count() >= 2 else 1
+    mesh_ov = make_host_mesh(D_ov)
+    pb = compression.payload_bytes(w_fs, "int8")
+    for V_ov in (4, 8):
+        for fsdp_ov in (False, True):
+            vals_ov = (jax.device_put(w_fs, compression.fsdp_shardings(
+                w_fs, mesh_ov, V_ov)) if fsdp_ov else w_fs)
+            err_ov = compression.zeros_error_state(w_fs, V_ov)
+            for mode in compression.OVERLAP_MODES:
+                fn = compression.make_dp_grad_fn(
+                    loss_fs, mesh_ov, method="int8",
+                    accum_shards=V_ov, fsdp=fsdp_ov, overlap=mode)
+                us = time_fn(
+                    lambda: fn(vals_ov, err_ov, batch_fs)[0],
+                    iters=5, warmup=2)
+                wire = pb * (V_ov // D_ov if fsdp_ov else V_ov)
+                _row(f"grad_exchange/overlap/"
+                     f"{'fsdp' if fsdp_ov else 'dp'}/V{V_ov}/{mode}",
+                     f"{us:.0f}",
+                     f"wire_bytes_per_step={wire};"
+                     f"rounds={V_ov // D_ov};payload_bytes={pb}")
 
 
 # ----------------------------------------------------------- roofline

@@ -1,2 +1,3 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer)
+    save_checkpoint, restore_checkpoint, latest_step,
+    checkpoint_metadata, AsyncCheckpointer)

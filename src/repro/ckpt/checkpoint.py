@@ -95,6 +95,28 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def checkpoint_metadata(directory: str,
+                        step: Optional[int] = None) -> dict:
+    """The user metadata stamped into a checkpoint's manifest at save
+    time (``save_checkpoint(metadata=...)``) — e.g. the Trainer's
+    TrainSpec layout fingerprint, which the restore path verifies
+    before touching the arrays.  ``step=None`` reads the latest
+    checkpoint; missing directory/step or a pre-metadata manifest
+    yields ``{}`` (restore then proceeds unverified, exactly as it did
+    before stamping existed)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return {}
+    path = os.path.join(directory, f"step_{step:010d}",
+                        "manifest.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        manifest = json.load(f)
+    return manifest.get("metadata") or {}
+
+
 def restore_checkpoint(directory: str, like, *, step: Optional[int] = None,
                        shardings=None, strict: bool = True):
     """Restore into the structure of ``like``.

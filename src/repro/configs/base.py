@@ -117,24 +117,33 @@ def serve_builder(method: str):
     return builder
 
 
-def dp_train_step_builder(model, mesh, method: str,
+def dp_train_step_builder(model, mesh, method: str = None,
                           accum_shards: int | None = None,
-                          fsdp: bool = False):
+                          fsdp: bool = False,
+                          spec=None):
     """Train-cell variant routed through the elastic compressed
-    gradient exchange (repro.dist.compression) so the dry-run's
-    collective accounting reflects the bytes the compressed exchange
-    actually ships.  Returns ``(fn, err_state_eval_shape)`` where
-    ``fn(values, opt_state, err_state, batch) -> (new_values,
-    new_opt_state, new_err, loss)``.  Parameters stay replicated on
-    the plain path (the exchange ships full-leaf payloads); with
-    ``fsdp=True`` params/moments are row-sharded over the data axes
-    and each round's payload is reduce-scattered instead — the cell's
-    in/out shardings must then come from ``compression.fsdp_shardings``
+    gradient exchange via the ``repro.train.spec`` training engine so
+    the dry-run's collective accounting reflects the bytes the
+    compressed exchange actually ships.  Pass a ``TrainSpec`` directly
+    (``spec=...``), or use the legacy ``method``/``accum_shards``/
+    ``fsdp`` kwargs — a ``spec_for`` shim resolving to the identical
+    spec.  Returns ``(fn, err_state_eval_shape)`` where ``fn(values,
+    opt_state, err_state, batch) -> (new_values, new_opt_state,
+    new_err, loss)``.  Parameters stay replicated on the plain path
+    (the exchange ships full-leaf payloads); with ``spec.fsdp`` params
+    / moments are row-sharded over the data axes and each round's
+    payload is reduce-scattered instead — the cell's in/out shardings
+    must then come from ``repro.train.spec.state_shardings``
     (launch/dryrun.py wires this)."""
-    from repro.dist import compression
     from repro.nn import module as nn
+    from repro.train import spec as train_spec
     from repro.train.optimizer import OptConfig, apply_updates
 
+    if spec is None:
+        # dry-run cells are rng-less single traces
+        spec = train_spec.spec_for(grad_compression=method,
+                                   grad_accum_shards=accum_shards,
+                                   fsdp=fsdp, rng="none")
     opt_cfg = OptConfig(kind="adamw", lr=1e-4, weight_decay=0.01)
 
     def loss_fn(values, batch):
@@ -146,22 +155,18 @@ def dp_train_step_builder(model, mesh, method: str,
         return apply_updates(opt_cfg, opt_state, values, grads,
                              grad_norm=grad_norm)
 
-    step = compression.make_elastic_dp_step(
-        loss_fn, mesh, method, accum_shards=accum_shards,
-        apply_fn=apply_fn, fsdp=fsdp)
+    step = train_spec.build_train_step(spec, loss_fn=loss_fn,
+                                       mesh=mesh, apply_fn=apply_fn)
 
     def fn(values, opt_state, err_state, batch):
         new_values, new_opt, new_err, mets = step(
             values, opt_state, err_state, batch)
         return new_values, new_opt, new_err, mets["loss"]
 
-    def err_shapes(values_sds):
-        return jax.eval_shape(
-            lambda v: compression.zeros_error_state(v, step.n_shards),
-            values_sds)
+    err_shapes = train_spec.error_state_shapes(spec, mesh)
 
     fn.n_shards = step.n_shards
-    fn.fsdp = fsdp
+    fn.fsdp = spec.fsdp
     return fn, err_shapes
 
 

@@ -21,12 +21,12 @@ across mesh sizes**.  A run started on 8 devices and resumed on 4
 to an uninterrupted run.  Three properties make this hold:
 
   1. every virtual slice's gradient is computed by a structurally
-     identical per-device subgraph: each ``collect`` dispatch processes
-     exactly ONE slice per device, and the host drives ``L = V / D``
-     rounds (fewer devices just means more rounds).  Running several
-     slices inside one module lets XLA batch the gemms and perturbs the
-     reduction order at the ULP level — one-slice-per-dispatch is what
-     pins the numerics;
+     identical per-device subgraph: each round processes exactly ONE
+     slice per device, and the host drives ``L = V / D`` rounds (fewer
+     devices just means more rounds).  Running several slices inside
+     one module lets XLA batch the gemms and perturbs the reduction
+     order at the ULP level — one-slice-per-dispatch is what pins the
+     numerics;
   2. the only cross-device ops are all-gather / all-to-all — exact
      data movement, no arithmetic;
   3. the dequantise / mean / (optional) optimizer update runs in a
@@ -38,7 +38,46 @@ to an uninterrupted run.  Three properties make this hold:
 The error-feedback state is likewise ``[V, ...]`` per float leaf —
 mesh-shape independent, so a checkpoint restores onto any mesh whose
 data-parallel degree divides ``V`` (``repro.ckpt.restore_checkpoint``
-re-lays it out; ``repro.train.loop.Trainer`` threads all of this).
+re-lays it out; ``repro.train.loop.Trainer`` threads all of this —
+driven by a ``repro.train.spec.TrainSpec``, the policy object the
+``overlap`` / ``method`` / ``accum_shards`` knobs below are fields of).
+
+Staged round modules (``overlap`` scheduling)
+---------------------------------------------
+Each round is two separately-jitted stage modules instead of one
+monolithic body:
+
+  * ``step.forward_backward(values, batch_rows, rng, rnd)`` — the
+    per-slice loss/grad computation.  Its only collectives are the
+    scalar loss/aux row gathers; every gradient leaf comes out as a
+    per-device ``[D, ...]`` row stack sharded over the data axes, so
+    NO payload bytes cross the wire here;
+  * ``step.quantise_pack(g_rows, err_rows)`` — error-feedback add,
+    quantise, and the payload collective (all-gather, or the fsdp
+    ordered-reduce-scatter all-to-all).  This is where the payload
+    bytes live.
+
+Because the gradient stays in its producing device's row between the
+stages (matching in/out shardings), the split adds no data movement —
+and it gives the host scheduler a seam: backward-of-round ``r+1`` can
+be dispatched while exchange-of-round ``r`` is still in flight.  The
+``overlap`` modes (``repro.train.spec.OVERLAP_MODES``):
+
+  * ``"none"`` — strictly serial rounds; the bit-identity oracle;
+  * ``"dispatch"`` — the round-level double buffer: round ``r+1``
+    (both stages) is issued while round ``r``'s exchange is in flight,
+    blocking on round ``r-1`` to bound the queue to two rounds;
+  * ``"backward"`` — additionally issues ``forward_backward(r+1)``
+    immediately after ``quantise_pack(r)`` is dispatched, so the
+    backward pass of the next round overlaps the current round's
+    payload collective (at the cost of keeping two rounds'
+    uncompressed gradient stacks live).
+
+All three modes dispatch the SAME two compiled stage executables in
+the same per-round order — only the host interleaving differs — so
+every mode is bitwise identical to every other, on every mesh whose
+dp degree divides ``V``, by construction.  Legacy boolean ``overlap``
+values are accepted (``True`` -> "dispatch", ``False`` -> "none").
 
 FSDP composition (``fsdp=True``)
 --------------------------------
@@ -51,7 +90,7 @@ moments, and the per-round gradient payloads:
   * parameters/moments live row-sharded over the data axes
     (``fsdp_shardings``); a tiny jitted ``step.gather`` module
     all-gathers the parameters ONCE per step for the loss/grad
-    computation (the per-round collects then reuse the replicated
+    computation (the per-round stages then reuse the replicated
     values);
   * the per-round payload collective becomes an **ordered
     reduce-scatter**: ``lax.all_to_all`` delivers each device only the
@@ -71,21 +110,19 @@ moments, and the per-round gradient payloads:
     applies the optimizer update to its owned slice only — no
     replicated update pass.
 
-The host round loop is double-buffered when ``overlap=True``: round
-``r+1``'s collect is dispatched while round ``r``'s payload is still
-in flight, and a ``block_until_ready`` on round ``r-1`` bounds the
-dispatch queue to two rounds without ever serialising dispatch against
-execution.  ``step.last_schedule`` records the (issue/drain/consume)
-order of the most recent step for the conformance suite.
+``step.last_schedule`` records the (fb/issue/drain/consume, round)
+dispatch order of the most recent step for the conformance suite
+(tests/test_fsdp_exchange.py, tests/test_elastic_train.py).
 
 ``payload_bytes`` is the matching accounting hook: bytes of
 *compressed* gradient payload a virtual shard ships per step
 (quantisation scales — one scalar per tensor — are excluded; they are
 noise next to the payload).  The collectives really do carry the
 compressed dtype, so the same number is visible in compiled HLO via
-``repro.dist.hlo.collective_bytes`` — the cross-check the conformance
-suites (tests/test_elastic_train.py, tests/test_fsdp_exchange.py) pin
-down.
+``repro.dist.hlo.collective_bytes`` — ``step.collect`` lowers both
+stages as one module for exactly that AOT accounting (its collectives
+are the union of the two stages'), and the conformance suites pin the
+byte totals down.
 
 ``make_dp_grad_fn`` is the grads-only surface over the same machinery.
 """
@@ -103,11 +140,32 @@ from repro.dist.compat import shard_map
 
 METHODS = ("none", "bf16", "int8")
 
-# bytes per element actually put on the wire.  ``body`` casts every
-# gradient (plus its error-feedback row) to f32 before compressing, so
-# "none" ships 4 bytes/element regardless of the parameter dtype — a
-# bf16 parameter's gradient still crosses the wire as f32.
+# host round-scheduling policies (see the module docstring); the
+# canonical home of the policy value is repro.train.spec.TrainSpec,
+# which mirrors this tuple without importing jax
+OVERLAP_MODES = ("none", "dispatch", "backward")
+
+# bytes per element actually put on the wire.  ``forward_backward``
+# casts every gradient (plus its error-feedback row) to f32 before
+# compressing, so "none" ships 4 bytes/element regardless of the
+# parameter dtype — a bf16 parameter's gradient still crosses the wire
+# as f32.
 _PAYLOAD_ITEMSIZE = {"none": 4, "bf16": 2, "int8": 1}
+
+
+def normalise_overlap(overlap) -> str:
+    """Map legacy boolean overlap flags onto the mode strings:
+    ``True`` was the round-level double buffer, ``False`` the serial
+    loop.  ``None`` means "the default" (dispatch)."""
+    if overlap is None or overlap is True:
+        return "dispatch"
+    if overlap is False:
+        return "none"
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(
+            f"unknown overlap mode {overlap!r}: expected one of "
+            f"{OVERLAP_MODES} (or a legacy bool)")
+    return overlap
 
 
 def _is_float(x) -> bool:
@@ -243,7 +301,7 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
                          accum_shards: int | None = None,
                          has_aux: bool = False, with_rng: bool = False,
                          apply_fn=None, fsdp: bool = False,
-                         overlap: bool = True):
+                         overlap="dispatch"):
     """Build the elastic-deterministic data-parallel step.
 
     ``loss_fn(values, batch[, rng]) -> loss`` (or ``(loss, aux)`` with
@@ -272,19 +330,30 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
     bitwise-deterministic global grad norm injected via ``grad_norm=``.
     Returned values / opt state / grads keep the sharded layout.
 
-    ``step`` is a host-level function composed of the jitted modules
-    ``step.collect`` (per-slice grad + compress + exchange; this is
-    where the payload collectives live), ``step.combine`` (dequantise +
-    ordered mean + update) and — fsdp only — ``step.gather``.
-    ``step.n_shards`` is the virtual shard count, ``step.rounds`` the
-    dispatches per step on this mesh, and ``step.last_schedule`` the
-    (issue/drain/consume, round) dispatch trace of the most recent
-    call (``overlap=True`` issues round ``r+1`` before consuming round
-    ``r``).  The whole of ``step`` is also jax-traceable, so it can be
-    lowered as one module for AOT accounting (launch/dryrun.py).
+    ``step`` is a host-level function driving the jitted stage modules
+    ``step.forward_backward`` (per-slice loss/grad; scalar gathers
+    only) and ``step.quantise_pack`` (error-feedback + compress +
+    payload exchange), then ``step.combine`` (dequantise + ordered
+    mean + update) and — fsdp only — ``step.gather``.  ``overlap``
+    picks the host round schedule (``OVERLAP_MODES``; legacy bools
+    accepted): "none" serial, "dispatch" double-buffered rounds,
+    "backward" additionally overlapping backward-of-round-``r+1`` with
+    exchange-of-round-``r``.  All modes dispatch the same stage
+    executables in the same per-round order, so they are bitwise
+    identical to each other on every mesh.  ``step.n_shards`` is the
+    virtual shard count, ``step.rounds`` the rounds per step on this
+    mesh, and ``step.last_schedule`` the (fb/issue/drain/consume,
+    round) dispatch trace of the most recent call ("issue" = the
+    round's quantise_pack dispatch).  ``step.collect`` traces both
+    stages as ONE jitted module with the pre-split calling convention
+    ``collect(values, err_rows, batch_rows, rng, rnd)`` — kept for AOT
+    collective-byte accounting (its collectives are the union of the
+    stages'); the whole of ``step`` is likewise jax-traceable, so it
+    can be lowered as one module (launch/dryrun.py).
     """
     if method not in METHODS:
         raise ValueError(f"unknown compression method {method!r}")
+    overlap = normalise_overlap(overlap)
     dp = _rules.data_mesh_axes(mesh)
     D = dp_shard_count(mesh)
     V = D if accum_shards is None else int(accum_shards)
@@ -301,6 +370,9 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
     def _sharded(v) -> bool:
         return fsdp and fsdp_leaf_sharded(v, V)
 
+    def _gath(x):
+        return jax.lax.all_gather(x, dp, axis=0, tiled=False)
+
     def _stack_v(xs):
         # interleave the L rounds back into virtual order v = d*L + r:
         # stack [L × [D, ...]] on axis=1 -> [D, L, ...] -> [V, ...].
@@ -313,8 +385,14 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
         return jax.lax.optimization_barrier(
             s.reshape((V,) + s.shape[2:]))
 
-    def body(values, err_rows, batch_rows, rng, rnd):
-        # exactly one virtual slice per device: [1, B/V, ...] locally
+    # ---------------------------------------------------- stage bodies
+    # Stage 1: per-slice forward + backward.  One virtual slice per
+    # device; gradient leaves leave the module as [1, ...] local rows
+    # (global [D, ...], row-sharded over the data axes) so the only
+    # wire traffic is the scalar loss/aux gathers.  Non-float / float0
+    # / empty leaves become [1, 0] f32 placeholders — float0 cannot
+    # cross a jit boundary, and quantise_pack re-detects them by shape.
+    def fb_body(values, batch_rows, rng, rnd):
         mb = jax.tree.map(lambda x: x[0], batch_rows)
         vi = _dp_flat_index(dp, mesh) * L + rnd        # virtual index
         args = (values, mb)
@@ -322,18 +400,30 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
             args += (jax.random.fold_in(rng, vi),)
         out, g = vg(*args)
         loss, aux = out if has_aux else (out, {})
-        gath = lambda x: jax.lax.all_gather(x, dp, axis=0, tiled=False)  # noqa: E731
 
-        def one(gl, el):
+        def one_g(gl):
             if not _is_float(gl) or not gl.size:
+                return jnp.zeros((1, 0), jnp.float32)
+            return gl.astype(jnp.float32)[None]
+
+        flat_g, tdef = jax.tree.flatten(g)
+        g_rows = tdef.unflatten([one_g(gl) for gl in flat_g])
+        return g_rows, _gath(loss), jax.tree.map(_gath, dict(aux))
+
+    # Stage 2: error-feedback add + quantise + the payload collective.
+    # Consumes the [D, ...] row stacks sharded exactly as stage 1
+    # produced them, so the jit boundary moves no data.
+    def qp_body(g_rows, err_rows):
+        def one(gr, el):
+            if gr.shape[1:] == (0,):
                 # int/float0/empty leaves: nothing to exchange
                 z = jnp.zeros((0,), jnp.float32)
-                return gath(z), jnp.zeros((), jnp.float32), el
-            t = gl.astype(jnp.float32) + el[0]
+                return _gath(z), jnp.zeros((), jnp.float32), el
+            t = gr[0] + el[0]
             pay, scale, new_e = _quantise(t, method)
             if scale is None:
                 scale = jnp.zeros((), jnp.float32)
-            if _sharded(gl):
+            if _sharded(gr[0]):
                 # ordered reduce-scatter: every device contributes its
                 # full compressed slice gradient and receives only the
                 # D contributions for its OWN rows (concatenated in
@@ -344,36 +434,73 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
                 payx = jax.lax.all_to_all(pay, dp, split_axis=0,
                                           concat_axis=0, tiled=True)
             else:
-                payx = gath(pay)
+                payx = _gath(pay)
             return payx, scale, new_e[None]
 
-        flat_g, tdef = jax.tree.flatten(g)
+        flat_g, tdef = jax.tree.flatten(g_rows)
         flat_e = tdef.flatten_up_to(err_rows)
         outs = [one(gl, el) for gl, el in zip(flat_g, flat_e)]
         pays = tdef.unflatten([o[0] for o in outs])    # [D, ...] | [n]
-        scales = tdef.unflatten([gath(o[1]) for o in outs])   # [D]
+        scales = tdef.unflatten([_gath(o[1]) for o in outs])  # [D]
         new_err = tdef.unflatten([o[2] for o in outs])
-        loss_g = gath(loss)                                   # [D]
-        aux_g = jax.tree.map(gath, dict(aux))
-        return pays, scales, new_err, loss_g, aux_g
+        return pays, scales, new_err
 
-    def collect(values, err_rows, batch_rows, rng, rnd):
+    # ------------------------------------------------- stage wrappers
+    def _specs_for(values, err_rows, batch_rows):
         specs_v = jax.tree.map(lambda _: repl, values)
+        specs_g = jax.tree.map(lambda _: err_spec, values)
         specs_e = jax.tree.map(lambda _: err_spec, err_rows)
         specs_b = jax.tree.map(lambda _: err_spec, batch_rows)
         # scattered payloads come out row-sharded; gathered ones (and
         # every non-fsdp payload) replicated
         pay_specs = jax.tree.map(
             lambda v: err_spec if _sharded(v) else repl, values)
+        return specs_v, specs_g, specs_e, specs_b, pay_specs
+
+    def fb(values, batch_rows, rng, rnd):
+        specs_v = jax.tree.map(lambda _: repl, values)
+        specs_g = jax.tree.map(lambda _: err_spec, values)
+        specs_b = jax.tree.map(lambda _: err_spec, batch_rows)
         f = shard_map(
-            body, mesh=mesh,
-            in_specs=(specs_v, specs_e, specs_b, repl, repl),
-            out_specs=(pay_specs,
-                       jax.tree.map(lambda _: repl, values),
-                       specs_e, repl,
-                       repl),
+            fb_body, mesh=mesh,
+            in_specs=(specs_v, specs_b, repl, repl),
+            out_specs=(specs_g, repl, repl),
             check_vma=False)
-        return f(values, err_rows, batch_rows, rng, rnd)
+        return f(values, batch_rows, rng, rnd)
+
+    def qp(g_rows, err_rows):
+        specs_g = jax.tree.map(lambda _: err_spec, g_rows)
+        specs_e = jax.tree.map(lambda _: err_spec, err_rows)
+        pay_specs = jax.tree.map(
+            lambda g: err_spec if _sharded_rows(g) else repl, g_rows)
+        f = shard_map(
+            qp_body, mesh=mesh,
+            in_specs=(specs_g, specs_e),
+            out_specs=(pay_specs,
+                       jax.tree.map(lambda _: repl, g_rows),
+                       specs_e),
+            check_vma=False)
+        return f(g_rows, err_rows)
+
+    def _sharded_rows(g) -> bool:
+        # g is the [D, ...] row stack of a leaf; the leaf's own shape
+        # is g.shape[1:], which is what the fsdp classification reads
+        shape = _leaf_shape(g)[1:]
+        if not shape or math.prod(shape) == 0:
+            return False
+        return fsdp and (shape[0] % V == 0) and \
+            jnp.issubdtype(_leaf_dtype(g), jnp.floating)
+
+    forward_backward = jax.jit(fb)
+    quantise_pack = jax.jit(qp)
+
+    def collect(values, err_rows, batch_rows, rng, rnd):
+        # both stages traced as ONE module — the AOT accounting
+        # surface (pre-split calling convention); the scheduler below
+        # never dispatches this, it drives the stage jits directly
+        g_rows, loss_g, aux_g = fb(values, batch_rows, rng, rnd)
+        pays, scales, new_err = qp(g_rows, err_rows)
+        return pays, scales, new_err, loss_g, aux_g
 
     collect = jax.jit(collect)
 
@@ -532,28 +659,38 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
         values_full = gather(values) if fsdp else values
         pays, scales, errs, losses, auxes = [], [], [], [], []
         schedule = []
+        fb_outs = [None] * L
 
-        def issue(r):
-            idx = idx_rounds[r]
-            e_r = jax.tree.map(lambda x: x[idx], err_state)
-            b_r = jax.tree.map(lambda x: x[idx], rows)
+        def issue_fb(r):
+            b_r = jax.tree.map(lambda x: x[idx_rounds[r]], rows)
+            schedule.append(("fb", r))
+            fb_outs[r] = forward_backward(values_full, b_r, rng,
+                                          jnp.int32(r))
+
+        def issue_qp(r):
+            e_r = jax.tree.map(lambda x: x[idx_rounds[r]], err_state)
             schedule.append(("issue", r))
-            return collect(values_full, e_r, b_r, rng, jnp.int32(r))
+            return quantise_pack(fb_outs[r][0], e_r)
 
-        def consume(r, out):
-            p, s, e, lo, au = out
+        def consume(r, q):
+            p, s, e = q
             schedule.append(("consume", r))
             pays.append(p)
             scales.append(s)
             errs.append(e)
-            losses.append(lo)
-            auxes.append(au)
+            losses.append(fb_outs[r][1])
+            auxes.append(fb_outs[r][2])
+            fb_outs[r] = None     # drop the uncompressed grad stack
 
-        if overlap:
-            # double-buffered dispatch: round r+1 is issued while round
-            # r's exchange is still in flight; blocking on round r-1
-            # bounds the in-flight window to two rounds without ever
-            # serialising a dispatch against the previous execution
+        if overlap == "dispatch":
+            # round-level double buffer: round r+1 (both stages) is
+            # issued while round r's exchange is still in flight;
+            # blocking on round r-1 bounds the in-flight window to two
+            # rounds without ever serialising a dispatch against the
+            # previous execution
+            def issue(r):
+                issue_fb(r)
+                return issue_qp(r)
             pending, prev = issue(0), None
             for r in range(L):
                 nxt = issue(r + 1) if r + 1 < L else None
@@ -562,9 +699,27 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
                     schedule.append(("drain", r - 1))
                 consume(r, pending)
                 prev, pending = pending, nxt
-        else:
+        elif overlap == "backward":
+            # backward-of-round-r+1 overlaps exchange-of-round-r: the
+            # forward_backward(r+1) dispatch lands between issuing
+            # quantise_pack(r) and consuming round r, on top of the
+            # dispatch double buffer (block on r-1 only).  Costs one
+            # extra live uncompressed gradient stack.
+            issue_fb(0)
+            prev = None
             for r in range(L):
-                consume(r, issue(r))
+                q = issue_qp(r)
+                if r + 1 < L:
+                    issue_fb(r + 1)
+                if prev is not None:
+                    _block(prev[0])
+                    schedule.append(("drain", r - 1))
+                consume(r, q)
+                prev = q
+        else:                                          # "none": serial
+            for r in range(L):
+                issue_fb(r)
+                consume(r, issue_qp(r))
         step.last_schedule = tuple(schedule)
         # err rows back into [V, ...] virtual order (exact interleave)
         new_err = jax.tree.map(
@@ -599,6 +754,8 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
     step.method = method
     step.fsdp = fsdp
     step.overlap = overlap
+    step.forward_backward = forward_backward
+    step.quantise_pack = quantise_pack
     step.collect = collect
     step.combine = combine
     step.gather = gather
@@ -608,7 +765,7 @@ def make_elastic_dp_step(loss_fn, mesh, method: str = "none", *,
 
 def make_dp_grad_fn(loss_fn, mesh, method: str = "none", *,
                     accum_shards: int | None = None,
-                    fsdp: bool = False, overlap: bool = True):
+                    fsdp: bool = False, overlap="dispatch"):
     """Grads-only surface: ``(values, err_state, batch) -> (grads,
     err_state, loss)``.  ``loss_fn(values, batch) -> scalar``; the
     batch's leading dim is split over ``accum_shards`` virtual shards
@@ -619,7 +776,8 @@ def make_dp_grad_fn(loss_fn, mesh, method: str = "none", *,
     codebooks etc.) come back as zero "gradients" in the leaf's own
     shape/dtype, so tree-wide ``v - lr * g`` updates stay valid.  With
     ``fsdp=True`` values must be laid out per ``fsdp_shardings`` and
-    the returned grads keep that sharded layout."""
+    the returned grads keep that sharded layout.  ``overlap`` is an
+    ``OVERLAP_MODES`` string (legacy bools accepted)."""
     return make_elastic_dp_step(loss_fn, mesh, method,
                                 accum_shards=accum_shards, fsdp=fsdp,
                                 overlap=overlap)

@@ -28,6 +28,7 @@ from repro.dist.hlo import collective_bytes  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)
 from repro.nn import module as nn  # noqa: E402
+from repro.train import spec as train_spec  # noqa: E402
 from repro.train.optimizer import init_opt_state  # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__),
@@ -51,18 +52,21 @@ def _replicated_or_param(mesh, s, p_sh):
 
 def build_cell_args(bundle, cell, model, mesh, rules=None, *,
                     serve_kwargs=None, grad_compression=None,
-                    accum_shards=None, fsdp=False):
+                    accum_shards=None, fsdp=False, overlap=None,
+                    spec=None):
     """Returns (fn, args tuple of SDS-with-sharding, donate_argnums).
 
     ``serve_kwargs``: forwarded to serve-cell builders (fused/prune
     variants — builders drop keys their method doesn't accept).
-    ``grad_compression``: route train cells through the elastic
-    compressed-gradient exchange (configs.base.dp_train_step_builder)
-    so the collective accounting shows the compressed payload bytes.
-    ``fsdp``: row-shard params/moments over the data axes and lower the
-    reduce-scatter exchange variant — input shardings come from
-    ``compression.fsdp_shardings`` so the analysis sees the per-device
-    slices."""
+    ``spec``: a ``repro.train.spec.TrainSpec`` routing elastic train
+    cells through the compressed-gradient exchange so the collective
+    accounting shows the compressed payload bytes; the legacy
+    ``grad_compression``/``accum_shards``/``fsdp``/``overlap`` kwargs
+    survive as a ``spec_for`` shim over the same path.  Under
+    ``spec.fsdp`` params/moments row-shard over the data axes and the
+    reduce-scatter exchange variant lowers — input shardings come from
+    the ``train.spec`` layout facade so the analysis sees the
+    per-device slices."""
     params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     model._params_meta = params_sds
     values_sds = nn.values(params_sds)
@@ -70,10 +74,10 @@ def build_cell_args(bundle, cell, model, mesh, rules=None, *,
     values_in = _attach(values_sds, p_sh)
 
     batch_in = {}
-    for name, spec in cell.specs.items():
+    for name, cspec in cell.specs.items():
         sh = NamedSharding(mesh, dist.resolve_axes(
-            spec.axes, spec.shape, mesh, rules))
-        batch_in[name] = _sds(spec.shape, spec.dtype, sh)
+            cspec.axes, cspec.shape, mesh, rules))
+        batch_in[name] = _sds(cspec.shape, cspec.dtype, sh)
 
     if cell.kind == "serve" and serve_kwargs:
         fn = cell.build(model, **serve_kwargs)
@@ -81,22 +85,22 @@ def build_cell_args(bundle, cell, model, mesh, rules=None, *,
         fn = cell.build(model)
     if cell.kind == "train":
         opt_sds = jax.eval_shape(init_opt_state, values_sds)
-        if grad_compression:
+        if spec is None:
+            spec = train_spec.spec_for(
+                grad_compression=grad_compression,
+                grad_accum_shards=accum_shards, fsdp=fsdp,
+                overlap=overlap, rng="none")
+        if spec.elastic:
             from repro.configs.base import dp_train_step_builder
-            from repro.dist import compression
-            fn, err_shapes = dp_train_step_builder(
-                model, mesh, grad_compression,
-                accum_shards=accum_shards, fsdp=fsdp)
+            fn, err_shapes = dp_train_step_builder(model, mesh,
+                                                   spec=spec)
             repl = NamedSharding(mesh, PartitionSpec())
-            err_sh = NamedSharding(mesh,
-                                   compression.dp_partition_spec(mesh))
-            if fsdp:
-                values_shs = compression.fsdp_shardings(
-                    values_sds, mesh, fn.n_shards)
-                opt_shs = compression.fsdp_shardings(
-                    opt_sds, mesh, fn.n_shards)
-                values_in = _attach(values_sds, values_shs)
-                opt_in = _attach(opt_sds, opt_shs)
+            err_sh = train_spec.err_sharding(mesh)
+            if spec.fsdp:
+                values_in = _attach(values_sds, train_spec.state_shardings(
+                    spec, values_sds, mesh))
+                opt_in = _attach(opt_sds, train_spec.state_shardings(
+                    spec, opt_sds, mesh))
             else:
                 values_in = _attach(values_sds,
                                     jax.tree.map(lambda _: repl,
@@ -133,7 +137,7 @@ def build_cell_args(bundle, cell, model, mesh, rules=None, *,
 def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              rules=None, save: bool = True, force: bool = False,
              tag: str = "", serve_kwargs=None, grad_compression=None,
-             accum_shards=None, fsdp=False) -> dict:
+             accum_shards=None, fsdp=False, overlap=None) -> dict:
     mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
     os.makedirs(os.path.join(RESULTS_DIR, mesh_name), exist_ok=True)
     out_path = os.path.join(RESULTS_DIR, mesh_name,
@@ -161,7 +165,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         fn, args, donate = build_cell_args(
             bundle, cell, model, mesh, rules,
             serve_kwargs=serve_kwargs, grad_compression=grad_compression,
-            accum_shards=accum_shards, fsdp=fsdp)
+            accum_shards=accum_shards, fsdp=fsdp, overlap=overlap)
         with dist.use_mesh_rules(mesh, rules):
             jfn = jax.jit(fn, donate_argnums=donate)
             lowered = jfn.lower(*args)
@@ -228,21 +232,12 @@ def main():
     ap.add_argument("--serve-prune", action="store_true",
                     help="score-bound dynamically pruned fused serve "
                          "path (docs/serving.md §pruning)")
-    ap.add_argument("--grad-compression", default=None,
-                    choices=["none", "bf16", "int8"],
-                    help="lower train cells through the elastic "
-                         "compressed-gradient exchange so collective "
-                         "bytes reflect the compressed payloads")
-    ap.add_argument("--grad-accum-shards", type=int, default=None)
-    ap.add_argument("--fsdp", action="store_true",
-                    help="row-shard train-cell params/moments over the "
-                         "data axes; the exchange lowers to per-round "
-                         "reduce-scatter-sized all-to-alls (requires "
-                         "--grad-compression)")
+    # the shared TrainSpec flag cluster (same spellings as
+    # launch/train.py; no --microbatches — dry-run cells don't
+    # microbatch).  --fsdp alone is a valid elastic spec now (method
+    # "none"): spec_for derives elastic from any of the knobs.
+    train_spec.add_train_spec_args(ap, microbatches=False)
     args = ap.parse_args()
-    if args.fsdp and not args.grad_compression:
-        ap.error("--fsdp requires --grad-compression (the sharded "
-                 "exchange is a property of the dp train path)")
 
     serve_kwargs = {}
     if args.serve_fused is not None:
@@ -254,6 +249,8 @@ def main():
         bits = ([f"gc-{args.grad_compression}"]
                 if args.grad_compression else [])
         bits += ["fsdp"] if args.fsdp else []
+        bits += ([f"ov-{args.overlap}"]
+                 if args.overlap != "dispatch" else [])
         bits += ["prune"] if args.serve_prune else []
         bits += ["nofused"] if args.serve_fused is False else []
         args.tag = "-" + "-".join(bits) if bits else ""
@@ -275,7 +272,7 @@ def main():
                        serve_kwargs=serve_kwargs,
                        grad_compression=args.grad_compression,
                        accum_shards=args.grad_accum_shards,
-                       fsdp=args.fsdp)
+                       fsdp=args.fsdp, overlap=args.overlap)
         status = ("SKIP: " + rec["skipped"][:60] if "skipped" in rec
                   else "ERROR: " + rec.get("error", "")[:120]
                   if "error" in rec else

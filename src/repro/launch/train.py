@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch sasrec \
         --steps 300 --ckpt-dir /tmp/ckpt [--devices 8 --model-axis 2] \
-        [--grad-compression bf16]
+        [--grad-compression bf16] [--overlap backward]
 
 Paper backbones (sasrec / bert4rec / gru4rec) train on the synthetic
 sequence pipeline with RecJPQ selectable via --embedding; assigned archs
@@ -10,24 +10,39 @@ train their reduced smoke configs (full configs are cluster-scale — the
 dry-run covers them).  --devices N > 1 forks host devices (CPU SPMD) and
 runs the same pjit path a TPU pod would.
 
-Fault-tolerance knobs exercised here: --ckpt-every (atomic async saves),
-SIGTERM -> save-and-exit, automatic resume from --ckpt-dir.  With
---grad-compression (and a fixed --grad-accum-shards) the resume may use
-a *differently-sized* mesh: ``--mesh 4`` after an 8-device run restores
-params, opt state and error-feedback state onto the new mesh and
-continues bit-identically to an uninterrupted run (elastic restore,
-docs/sharding.md).  --fsdp additionally row-shards params, optimizer
-moments and error state across the data axes and turns each exchange
-round's all-gather into a reduce-scatter-sized all-to-all; the elastic
-contract is preserved — an --fsdp run killed on 8 devices resumes
-bit-identically on 4.
+The training-policy flags (--grad-compression / --grad-accum-shards /
+--fsdp / --overlap / --microbatches) are the shared TrainSpec cluster
+from ``repro.train.spec.add_train_spec_args`` — the same spellings
+``launch/dryrun.py`` takes — and resolve to one declarative
+``TrainSpec`` via ``spec_from_args``.
+
+Fault-tolerance knobs exercised here: --ckpt-every (atomic async saves,
+each stamped with the spec's layout fingerprint), SIGTERM ->
+save-and-exit, automatic resume from --ckpt-dir (layout-verified
+against the stamp).  With --grad-compression (and a fixed
+--grad-accum-shards) the resume may use a *differently-sized* mesh:
+``--mesh 4`` after an 8-device run restores params, opt state and
+error-feedback state onto the new mesh and continues bit-identically to
+an uninterrupted run (elastic restore, docs/sharding.md).  --fsdp
+additionally row-shards params, optimizer moments and error state
+across the data axes and turns each exchange round's all-gather into a
+reduce-scatter-sized all-to-all; --overlap picks the host round
+schedule (serial / double-buffered dispatch / backward-overlapped) —
+a pure wall-clock knob, every mode bitwise identical, so an
+interrupted --overlap backward run may even resume under a different
+mode.  The elastic contract is preserved throughout: an --fsdp run
+killed on 8 devices resumes bit-identically on 4.
 """
 import argparse
 import os
 import sys
 
+from repro.train.spec import add_train_spec_args, spec_from_args
 
-def main():
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, extracted so tests can assert flag parity with
+    the dryrun CLI.  Must stay importable before jax / XLA_FLAGS."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="sasrec")
     ap.add_argument("--embedding", default="jpq",
@@ -44,28 +59,20 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--eval-every", type=int, default=100)
     ap.add_argument("--early-stop-patience", type=int, default=0)
-    ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--devices", type=int, default=1,
                     help="forked host devices for SPMD (CPU)")
     ap.add_argument("--mesh", type=int, default=None,
                     help="alias for --devices; spell the restart of a "
                          "preempted run on a differently-sized mesh")
     ap.add_argument("--model-axis", type=int, default=1)
-    ap.add_argument("--grad-compression", default=None,
-                    choices=["none", "bf16", "int8"],
-                    help="elastic compressed-gradient exchange; 'none' "
-                         "still switches to the deterministic "
-                         "virtual-shard path (see TrainConfig)")
-    ap.add_argument("--grad-accum-shards", type=int, default=None,
-                    help="fixed virtual shard count; keep it constant "
-                         "across elastic restarts")
-    ap.add_argument("--fsdp", action="store_true",
-                    help="row-shard params/moments/error state over the "
-                         "data axes and reduce-scatter each exchange "
-                         "round (docs/sharding.md); composes with "
-                         "--grad-compression and elastic restarts")
+    add_train_spec_args(ap)        # the shared TrainSpec flag cluster
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    spec = spec_from_args(args)
 
     if args.mesh is not None:
         args.devices = args.mesh
@@ -85,10 +92,9 @@ def main():
     from repro.train.optimizer import OptConfig
 
     mesh = None
-    if args.devices > 1 or args.grad_compression is not None \
-            or args.grad_accum_shards is not None or args.fsdp:
-        # the grad-compression path needs a mesh even single-device
-        # (a (1, 1) host mesh: one data shard, V accumulation rounds)
+    if args.devices > 1 or spec.elastic:
+        # the elastic path needs a mesh even single-device (a (1, 1)
+        # host mesh: one data shard, V accumulation rounds)
         mesh = make_host_mesh(args.devices, args.model_axis)
         print(f"mesh: {dict(mesh.shape)}")
 
@@ -143,6 +149,10 @@ def main():
         print(f"arch {args.arch}: training the reduced smoke config "
               f"({bundle.description}); full config is dry-run only")
 
+    # the legacy TrainConfig knobs are populated alongside the explicit
+    # spec — both resolve to the same TrainSpec by construction, which
+    # the Trainer verifies (its conflict check would catch a drift
+    # between the flag cluster and the legacy fields)
     tr = Trainer(model, OptConfig(lr=args.lr),
                  TrainConfig(steps=args.steps, batch_size=args.batch_size,
                              log_every=max(args.steps // 10, 1),
@@ -154,8 +164,9 @@ def main():
                              grad_compression=args.grad_compression,
                              grad_accum_shards=args.grad_accum_shards,
                              fsdp=args.fsdp,
+                             overlap=args.overlap,
                              seed=args.seed),
-                 data_fn=data_fn, eval_fn=eval_fn, mesh=mesh)
+                 data_fn=data_fn, eval_fn=eval_fn, mesh=mesh, spec=spec)
     _, hist = tr.run()
     for h in hist[-5:]:
         print(h)

@@ -1,2 +1,28 @@
-"""Training substrate: optimizer, metrics, loops."""
-from repro.train.optimizer import OptConfig, init_opt_state, apply_updates  # noqa: F401
+"""Training substrate: the declarative training engine (TrainSpec +
+step-builder registry in ``repro.train.spec``), optimizer, metrics,
+loops.
+
+Attribute access is lazy (PEP 562): ``repro.train.spec`` must stay
+importable *without* pulling jax, because the launch CLIs build their
+argparse flag cluster (``add_train_spec_args``) before pinning
+``XLA_FLAGS`` — an eager ``optimizer`` import here would drag jax in
+first.
+"""
+_OPTIMIZER = ("OptConfig", "init_opt_state", "apply_updates")
+_SPEC = ("TrainSpec", "spec_for", "add_train_spec_args",
+         "spec_from_args", "build_train_step", "register_step_builder",
+         "unregister_step_builder", "step_builder_names",
+         "resolve_step_builder")
+
+__all__ = list(_OPTIMIZER + _SPEC)
+
+
+def __getattr__(name):
+    if name in _OPTIMIZER:
+        from repro.train import optimizer
+        return getattr(optimizer, name)
+    if name in _SPEC:
+        from repro.train import spec
+        return getattr(spec, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -11,6 +11,15 @@ payloads with error feedback carried — and checkpointed — next to the
 optimizer state, bitwise deterministic across mesh sizes so a
 preempted run resumes on a smaller mesh bit-identically
 (docs/sharding.md).  This same class is what launch/train.py drives.
+
+All of that policy now lives in one value object: the Trainer derives
+(or is handed) a ``repro.train.spec.TrainSpec`` and builds its step
+through the step-builder registry (``spec.build_train_step``), the
+legacy ``TrainConfig``/``OptConfig`` knobs surviving as a
+``spec_for`` shim.  Checkpoints are stamped with the spec's layout
+fingerprint so restore verifies compatibility up front instead of
+shape-guessing, and the history rows the loop appends are checked
+against ``repro.train.metrics.HISTORY_SCHEMA`` at the end of ``run``.
 """
 from __future__ import annotations
 
@@ -24,10 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dist
-from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.ckpt import (AsyncCheckpointer, checkpoint_metadata,
+                        latest_step, restore_checkpoint)
 from repro.dist import compression
 from repro.nn import module as nn
+from repro.train import spec as spec_mod
+from repro.train.metrics import validate_history
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+from repro.train.spec import TrainSpec
 
 
 @dataclasses.dataclass
@@ -64,13 +77,21 @@ class TrainConfig:
     # `payload` wire bytes per device per round instead of V x payload.
     # Implies the dp path; preserves the bitwise-elastic contract.
     fsdp: bool = False
+    # Host round schedule for the elastic collect rounds — one of
+    # repro.train.spec.OVERLAP_MODES ("none" serial oracle,
+    # "dispatch" double-buffered rounds, "backward" backward-of-round
+    # r+1 overlapping exchange-of-round r); legacy bools accepted.
+    # Wall-clock only: every mode is bitwise identical, so it is NOT
+    # part of the checkpoint layout.  None = the default "dispatch".
+    overlap: Any = None
 
 
 class Trainer:
     def __init__(self, model, opt_cfg: OptConfig, train_cfg: TrainConfig,
                  data_fn: Callable[[int], dict],
                  eval_fn: Optional[Callable[[Any], dict]] = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 spec: Optional[TrainSpec] = None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.cfg = train_cfg
@@ -83,29 +104,37 @@ class Trainer:
         self.history: list = []
         self.done_step = 0
         self.err_state = None              # error feedback (dp path)
-        method = (train_cfg.grad_compression
-                  if train_cfg.grad_compression is not None
-                  else opt_cfg.grad_compression)
-        if method not in compression.METHODS:
-            raise ValueError(f"unknown grad_compression {method!r}")
-        self._dp_method = method
-        self._fsdp = train_cfg.fsdp
-        self._use_dp = (train_cfg.grad_compression is not None
-                        or train_cfg.grad_accum_shards is not None
-                        or train_cfg.fsdp
-                        or method != "none")
+        # the legacy TrainConfig/OptConfig knobs normalise to a
+        # TrainSpec (hash-equal to passing the spec directly; a
+        # conflicting duplicate grad_compression raises inside
+        # spec_for).  An explicit spec wins — but only over *default*
+        # legacy knobs: an explicit spec AND a non-default knob
+        # disagreeing is ambiguous and raises.
+        derived = spec_mod.spec_for(
+            grad_compression=train_cfg.grad_compression,
+            opt_grad_compression=opt_cfg.grad_compression,
+            grad_accum_shards=train_cfg.grad_accum_shards,
+            fsdp=train_cfg.fsdp,
+            overlap=train_cfg.overlap,
+            microbatches=train_cfg.microbatches)
+        if spec is None:
+            spec = derived
+        elif derived != TrainSpec() and derived != spec:
+            raise ValueError(
+                f"Trainer got an explicit TrainSpec {spec} AND "
+                f"conflicting legacy TrainConfig/OptConfig knobs "
+                f"(which resolve to {derived}); set the policy in one "
+                f"place")
+        self.spec = spec
+        self._dp_method = spec.compression
+        self._fsdp = spec.fsdp
+        self._use_dp = spec.elastic
         if self._use_dp and mesh is None:
             raise ValueError(
                 "grad_compression / grad_accum_shards / fsdp "
                 "require a mesh")
-        if self._use_dp and train_cfg.microbatches > 1:
-            raise ValueError(
-                "grad_compression already accumulates over "
-                "grad_accum_shards virtual shards; set microbatches=1")
-        self._accum = None
-        if self._use_dp:
-            self._accum = (train_cfg.grad_accum_shards
-                           or compression.dp_shard_count(mesh))
+        self._accum = (spec.resolve_accum(mesh)
+                       if self._use_dp else None)
 
     # ----------------------------------------------------------- setup
     def _install_sigterm(self):
@@ -116,68 +145,11 @@ class Trainer:
         except ValueError:
             pass                                   # non-main thread
 
-    def _build_step(self, params_meta):
-        model, opt_cfg = self.model, self.opt_cfg
-        nmicro = self.cfg.microbatches
-
-        def loss_fn(values, batch, rng):
-            params = nn.with_values(params_meta, values)
-            loss, mets = model.train_loss(params, batch, rng)
-            return loss, mets
-
-        grad_fn = jax.grad(loss_fn, has_aux=True, allow_int=True)
-
-        def train_step(values, opt_state, batch, rng):
-            if nmicro > 1:
-                # rng is folded per microbatch — accumulation slices
-                # must not share dropout masks — and the full metrics
-                # dict rides through the scan ys (mean over slices),
-                # instead of collapsing to {"loss"}.
-                def micro(g_acc, i):
-                    mb = jax.tree.map(
-                        lambda x: jax.lax.dynamic_slice_in_dim(
-                            x, i * (x.shape[0] // nmicro),
-                            x.shape[0] // nmicro), batch)
-                    g, mb_mets = grad_fn(values, mb,
-                                         jax.random.fold_in(rng, i))
-                    g_acc = jax.tree.map(
-                        lambda a, b: a + jnp.asarray(b, a.dtype)
-                        if jnp.issubdtype(jnp.asarray(a).dtype,
-                                          jnp.floating) and a.size
-                        else a, g_acc, g)
-                    return g_acc, mb_mets
-                zeros = jax.tree.map(
-                    lambda v: jnp.zeros(v.shape, jnp.float32)
-                    if jnp.issubdtype(v.dtype, jnp.floating)
-                    else jnp.zeros((0,)), values)
-                grads, mets_stack = jax.lax.scan(
-                    micro, zeros, jnp.arange(nmicro))
-                grads = jax.tree.map(
-                    lambda g: g / nmicro
-                    if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating)
-                    and g.size else g, grads)
-                mets = jax.tree.map(lambda x: jnp.mean(x, axis=0),
-                                    mets_stack)
-            else:
-                grads, mets = grad_fn(values, batch, rng)
-            new_values, new_state, stats = apply_updates(
-                opt_cfg, opt_state, values, grads)
-            mets = dict(mets)
-            mets.update(stats)
-            return new_values, new_state, mets
-
-        return train_step
-
-    def _build_dp_step(self, params_meta):
-        """Elastic-deterministic compressed-exchange step (docs/
-        sharding.md §Gradient compression in the Trainer): returns
-        ``step(values, opt_state, err_state, batch, rng) ->
-        (new_values, new_opt, new_err, mets)``.  Parameters stay
-        replicated on the plain dp path (the exchange ships full-leaf
-        payloads); with ``cfg.fsdp`` params/moments are row-sharded and
-        the exchange reduce-scatters each round's payload instead
-        (docs/sharding.md §FSDP-composed exchange).  Per-virtual-shard
-        rng folds keep dropout masks mesh-invariant either way."""
+    def _loss_and_apply(self, params_meta):
+        """The StepContext ingredients shared by every builder: the
+        model loss closed over the param metadata, and the optimizer
+        apply hook (``grad_norm=`` is how the fsdp combine injects the
+        bitwise-deterministic global norm)."""
         model, opt_cfg = self.model, self.opt_cfg
 
         def loss_fn(values, batch, rng):
@@ -189,27 +161,41 @@ class Trainer:
             return apply_updates(opt_cfg, opt_state, values, grads,
                                  grad_norm=grad_norm)
 
-        return compression.make_elastic_dp_step(
-            loss_fn, self.mesh, self._dp_method,
-            accum_shards=self._accum, has_aux=True, with_rng=True,
-            apply_fn=apply_fn, fsdp=self._fsdp)
+        return loss_fn, apply_fn
+
+    def _build_step(self, params_meta):
+        """Plain/microbatch step via the step-builder registry —
+        ``train_step(values, opt_state, batch, rng)``.  Kept as a
+        method (and un-jitted) because callers jit it with their own
+        donation/sharding arguments."""
+        loss_fn, apply_fn = self._loss_and_apply(params_meta)
+        spec = (self.spec if not self.spec.elastic
+                else TrainSpec())            # grads-only debugging use
+        return spec_mod.build_train_step(
+            spec, loss_fn=loss_fn, mesh=None, apply_fn=apply_fn,
+            has_aux=True)
+
+    def _build_dp_step(self, params_meta):
+        """Elastic-deterministic compressed-exchange step via the
+        registry (docs/sharding.md §Gradient compression in the
+        Trainer): returns ``step(values, opt_state, err_state, batch,
+        rng) -> (new_values, new_opt, new_err, mets)``.  Parameters
+        stay replicated on the plain dp path (the exchange ships
+        full-leaf payloads); with ``spec.fsdp`` params/moments are
+        row-sharded and the exchange reduce-scatters each round's
+        payload instead (docs/sharding.md §FSDP-composed exchange).
+        Per-virtual-shard rng folds keep dropout masks mesh-invariant
+        either way; ``spec.overlap`` picks the host round schedule."""
+        loss_fn, apply_fn = self._loss_and_apply(params_meta)
+        return spec_mod.build_train_step(
+            self.spec, loss_fn=loss_fn, mesh=self.mesh,
+            apply_fn=apply_fn, has_aux=True)
 
     def _payload_metrics(self, values):
         """Static per-step exchange accounting rows (the conformance
-        suite cross-checks these against the HLO collective bytes)."""
-        pb = compression.payload_bytes(values, self._dp_method)
-        full = compression.payload_bytes(values, "none")
-        rounds = self._accum // compression.dp_shard_count(self.mesh)
-        # payload-collective bytes through one device per step: the dp
-        # path all-gathers every virtual shard's payload (V x pb), the
-        # fsdp path reduce-scatters one payload per round (L x pb; the
-        # once-per-step parameter gather is accounted separately)
-        wire = pb * (rounds if self._fsdp else self._accum)
-        return {"payload_bytes": pb,
-                "exchange_fraction": pb / full if full else 0.0,
-                "exchange_shards": self._accum,
-                "exchange_fsdp": int(self._fsdp),
-                "exchange_wire_bytes": wire}
+        suite cross-checks these against the HLO collective bytes;
+        repro.train.spec.payload_metrics documents the fields)."""
+        return spec_mod.payload_metrics(self.spec, values, self.mesh)
 
     # ------------------------------------------------------------- run
     def run(self, rng=None, resume: bool = True):
@@ -218,6 +204,10 @@ class Trainer:
         # per-run watchdog baseline: medians from a previous run() on
         # this Trainer are stale (different mesh, compile state, ...)
         self._step_times = []
+        # history rows accumulate across run() calls; the end-of-run
+        # schema validation (monotonic step etc.) covers THIS run's
+        # rows only — a second run restarts the step counter
+        hist_start = len(self.history)
         rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
         params_meta = self.model.init_params(rng)
         values = nn.values(params_meta)
@@ -234,6 +224,17 @@ class Trainer:
         if cfg.ckpt_dir:
             ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
             if resume and latest_step(cfg.ckpt_dir) is not None:
+                # the spec's layout fingerprint was stamped into the
+                # manifest at save time; verify compatibility BEFORE
+                # touching the arrays so a wrong --grad-accum-shards /
+                # --fsdp resume fails with the actionable spec error
+                # rather than a bare npz shape mismatch (pre-stamp
+                # checkpoints carry no fingerprint and restore
+                # unchecked)
+                stamp = checkpoint_metadata(cfg.ckpt_dir).get(
+                    "train_spec")
+                spec_mod.check_restore_layout(stamp, self.spec,
+                                              self._accum)
                 state = {"values": values, "opt": opt_state}
                 shardings = None
                 if self.mesh is not None:
@@ -308,6 +309,10 @@ class Trainer:
                 state["err"] = err_state
             return state
 
+        # every save is stamped with the spec's layout fingerprint —
+        # the restore path above is the consumer
+        ckpt_meta = {"train_spec": self.spec.layout_stamp(self.mesh)}
+
         with ctx:
             for step in range(start_step, cfg.steps):
                 t0 = time.perf_counter()
@@ -328,11 +333,13 @@ class Trainer:
                                          **payload_mets, "sec": dt})
                 if ckpt and cfg.ckpt_every and \
                         (step + 1) % cfg.ckpt_every == 0:
-                    ckpt.save(_ckpt_state(), step + 1)
+                    ckpt.save(_ckpt_state(), step + 1,
+                              metadata=ckpt_meta)
                     last_saved = step + 1
                 if self._preempted:
                     if ckpt and last_saved != step + 1:
-                        ckpt.save(_ckpt_state(), step + 1)
+                        ckpt.save(_ckpt_state(), step + 1,
+                                  metadata=ckpt_meta)
                         ckpt.wait()
                         last_saved = step + 1
                     break
@@ -352,10 +359,17 @@ class Trainer:
                                 break
         if ckpt:
             if last_saved != done_step:
-                ckpt.save(_ckpt_state(), done_step)
+                ckpt.save(_ckpt_state(), done_step,
+                          metadata=ckpt_meta)
             ckpt.wait()                    # drain the async writer
         self.done_step = done_step
         self.err_state = err_state
+        problems = validate_history(self.history[hist_start:])
+        if problems:
+            raise RuntimeError(
+                "train history failed schema validation "
+                "(repro.train.metrics.HISTORY_SCHEMA):\n  "
+                + "\n  ".join(problems))
         return nn.with_values(params_meta, values), self.history
 
     def _fsdp_layout(self, values, opt_state, err_state):

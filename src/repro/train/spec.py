@@ -1,0 +1,589 @@
+"""The training engine: declarative policy + a step-builder registry.
+
+``TrainSpec`` is the training-side analogue of
+``repro.core.engine.RetrievalSpec``: ONE frozen, hashable value object
+holding every knob that decides *how a training step is built and what
+state layout it trains against* — gradient compression method, virtual
+accumulation shards ``V``, fsdp state sharding, the host overlap
+schedule for the collect rounds, microbatching, and the rng policy.
+Policy only: no params, no mesh, no jit caches.  Because it is frozen
+and hashable it is the single cache/dispatch key for step building and
+the single layout fingerprint a checkpoint is stamped with (see
+``layout_stamp`` / ``check_restore_layout``).
+
+Historically this policy was scattered across ``TrainConfig``
+(``grad_compression`` / ``grad_accum_shards`` / ``fsdp`` /
+``microbatches``), a *duplicate* ``OptConfig.grad_compression`` knob,
+and per-call kwargs on ``configs/base.py dp_train_step_builder`` and
+the two launch CLIs.  All of those survive as shims over ``spec_for``
+(the kwargs normaliser) — legacy spellings resolve to hash-equal
+specs, and genuinely conflicting duplicates now raise instead of
+silently picking a winner.
+
+Step builders
+-------------
+``resolve_step_builder(spec)`` walks a registry of ``(name, match,
+build)`` strategies front-to-back, mirroring the scorer registry.  The
+built-ins reproduce the pre-registry steps argument-identically (the
+bitwise-elasticity and SIGTERM-resume conformance suites run against
+steps built through here):
+
+  * ``plain``        — single jitted grad+update step;
+  * ``microbatch``   — sequential-accumulation scan over
+                       ``spec.microbatches`` slices, f32 accumulators;
+  * ``elastic-dp``   — ``repro.dist.compression.make_elastic_dp_step``
+                       with replicated state;
+  * ``elastic-fsdp`` — the same exchange composed with row-sharded
+                       params/moments/err.
+
+``register_step_builder(name, match, build)`` prepends a strategy
+(registration order wins on overlap), so an experiment can take over
+step construction for the specs it recognises without touching the
+Trainer.
+
+Layout facade
+-------------
+``launch/`` and ``configs/`` are forbidden (tests/test_layering.py AST
+lint) from importing ``repro.dist.compression`` internals; the
+re-exports down this module (``err_partition_spec``, ``state_sharding
+s``, ``zeros_error_state``, ``payload_metrics``, ...) are the policy-
+level surface they use instead.  jax is imported lazily inside those
+functions so the CLI flag cluster (``add_train_spec_args`` /
+``spec_from_args``) stays importable before a launcher pins
+``XLA_FLAGS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+# mirrors repro.dist.compression.{METHODS, OVERLAP_MODES} without
+# importing jax at module import time (the launch CLIs must be able to
+# build their parsers before XLA_FLAGS is set);
+# tests/test_train_spec.py asserts the mirrors stay in sync
+METHODS = ("none", "bf16", "int8")
+OVERLAP_MODES = ("none", "dispatch", "backward")
+RNG_POLICIES = ("fold", "none")
+
+
+def _normalise_overlap(overlap) -> str:
+    """Legacy bools meant: True = the round-level dispatch double
+    buffer, False = the serial loop.  None = default."""
+    if overlap is None or overlap is True:
+        return "dispatch"
+    if overlap is False:
+        return "none"
+    return overlap
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """How a training step is built.  Frozen + hashable: specs are
+    jit-cache / registry-dispatch / checkpoint-layout keys.
+
+    compression   gradient payload compression ("none" | "bf16" |
+                  "int8"); only meaningful on the elastic path
+    accum_shards  virtual shard count V for the elastic exchange, or
+                  None for "the mesh's data-parallel degree" (resolve
+                  with ``resolve_accum``).  A *run* constant: it fixes
+                  the error-state shapes, the fsdp row classification
+                  and the reduction order, which is what makes the
+                  step bitwise across meshes whose dp degree divides V
+    fsdp          row-shard params/moments/err over the data axes
+                  (elastic path only)
+    overlap       host round schedule for the collect rounds ("none"
+                  serial oracle | "dispatch" double-buffered rounds |
+                  "backward" backward-of-round-r+1 overlapping
+                  exchange-of-round-r).  All modes are bitwise
+                  identical — this is a wall-clock knob, so it is NOT
+                  part of the checkpoint layout stamp
+    microbatches  sequential gradient accumulation on the plain path
+                  (the elastic path already accumulates over V)
+    rng           "fold" threads a per-step rng, folded per micro-
+                  batch / virtual shard; "none" builds rng-less steps
+                  (dryrun cells, grads-only surfaces)
+    elastic       whether the step is the elastic-deterministic dp
+                  exchange at all (derived by ``spec_for`` from the
+                  legacy knobs: any of compression/accum/fsdp set)
+    """
+    compression: str = "none"
+    accum_shards: Optional[int] = None
+    fsdp: bool = False
+    overlap: str = "dispatch"
+    microbatches: int = 1
+    rng: str = "fold"
+    elastic: bool = False
+
+    def __post_init__(self):
+        if self.compression not in METHODS:
+            raise ValueError(
+                f"unknown grad compression {self.compression!r}: "
+                f"expected one of {METHODS}")
+        if not isinstance(self.overlap, str) \
+                or self.overlap not in OVERLAP_MODES:
+            raise ValueError(
+                f"unknown overlap mode {self.overlap!r}: expected one "
+                f"of {OVERLAP_MODES} (spec_for accepts legacy bools)")
+        if self.rng not in RNG_POLICIES:
+            raise ValueError(
+                f"unknown rng policy {self.rng!r}: expected one of "
+                f"{RNG_POLICIES}")
+        object.__setattr__(self, "microbatches", int(self.microbatches))
+        if self.microbatches < 1:
+            raise ValueError(
+                f"microbatches={self.microbatches} must be >= 1")
+        if self.accum_shards is not None:
+            object.__setattr__(self, "accum_shards",
+                               int(self.accum_shards))
+            if self.accum_shards < 1:
+                raise ValueError(
+                    f"accum_shards={self.accum_shards} must be >= 1")
+        if not self.elastic:
+            if self.compression != "none":
+                raise ValueError(
+                    f"compression={self.compression!r} requires "
+                    f"elastic=True (spec_for derives it from the "
+                    f"legacy knobs)")
+            if self.accum_shards is not None:
+                raise ValueError(
+                    "accum_shards is the elastic exchange's virtual "
+                    "shard count; set elastic=True (or use "
+                    "microbatches for plain sequential accumulation)")
+            if self.fsdp:
+                raise ValueError(
+                    "fsdp=True requires elastic=True: the row-sharded "
+                    "state layout only exists for the elastic "
+                    "exchange")
+            if self.overlap != "dispatch":
+                raise ValueError(
+                    f"overlap={self.overlap!r} schedules the elastic "
+                    f"exchange's collect rounds; non-elastic specs "
+                    f"must leave it at the default 'dispatch'")
+        elif self.microbatches != 1:
+            raise ValueError(
+                "the elastic exchange already accumulates over "
+                "accum_shards virtual shards; set microbatches=1")
+
+    # -------------------------------------------------------- helpers
+    def resolve_accum(self, mesh) -> int:
+        """The concrete virtual shard count V on this mesh."""
+        if self.accum_shards is not None:
+            return int(self.accum_shards)
+        from repro.dist import compression
+        return compression.dp_shard_count(mesh)
+
+    def layout_stamp(self, mesh=None) -> dict:
+        """The checkpoint-layout fingerprint: the spec fields plus the
+        resolved V.  Stamped into every checkpoint manifest's metadata
+        (``repro.ckpt.save_checkpoint(metadata=...)``) and verified on
+        restore by ``check_restore_layout``.  Wall-clock-only fields
+        (overlap) are stamped for provenance but not enforced."""
+        d = dataclasses.asdict(self)
+        d["resolved_accum_shards"] = (
+            self.resolve_accum(mesh) if (self.elastic and mesh is not
+                                         None) else self.accum_shards)
+        return d
+
+
+# keys of the layout stamp that must match for a checkpoint to restore
+# onto a spec: they decide state tree shapes/sharding (err state
+# presence + [V, ...] rows, fsdp row-sharding) or the reduction
+# trajectory (compression method).  overlap/microbatches/rng are
+# deliberately absent — bitwise-equivalent wall-clock policy.
+_LAYOUT_KEYS = ("elastic", "compression", "fsdp",
+                "resolved_accum_shards")
+
+
+def check_restore_layout(stamp: Optional[dict], spec: TrainSpec,
+                         resolved_accum: Optional[int]) -> None:
+    """Verify a checkpoint's ``train_spec`` stamp against the spec the
+    run is resuming with.  ``stamp`` is the manifest metadata entry
+    (None / empty for pre-stamp checkpoints — those restore unchecked,
+    shape validation still applies).  Raises an actionable ValueError
+    on a layout mismatch instead of letting the npz restore fail with
+    a bare shape error."""
+    if not stamp:
+        return
+    have = dict(spec.layout_stamp())
+    have["resolved_accum_shards"] = resolved_accum
+    bad = []
+    for k in _LAYOUT_KEYS:
+        if k in stamp and stamp[k] != have.get(k):
+            bad.append(f"{k}: checkpoint={stamp[k]!r} "
+                       f"run={have.get(k)!r}")
+    if bad:
+        raise ValueError(
+            "checkpoint layout does not match this run's TrainSpec — "
+            + "; ".join(bad)
+            + ". Resume with the original --grad-compression/"
+            "--grad-accum-shards/--fsdp flags (any mesh whose "
+            "data-parallel degree divides the stamped accum_shards "
+            "works), or point --ckpt-dir at a fresh directory.")
+
+
+# ------------------------------------------------------------ spec_for
+def spec_for(*, grad_compression: Optional[str] = None,
+             opt_grad_compression: Optional[str] = None,
+             grad_accum_shards: Optional[int] = None,
+             fsdp: bool = False, microbatches: int = 1,
+             overlap=None, rng: str = "fold") -> TrainSpec:
+    """Normalise the legacy kwargs ladder into a ``TrainSpec``.
+
+    Reproduces the pre-spec Trainer's derivation exactly: the step is
+    elastic iff any of ``grad_compression`` (TrainConfig spelling,
+    ``None`` = unset), ``grad_accum_shards`` or ``fsdp`` is set, or
+    the effective method is not "none".  ``opt_grad_compression`` is
+    the deprecated ``OptConfig.grad_compression`` duplicate ("none" =
+    unset): either spelling alone resolves to the same (hash-equal)
+    spec; both set to *different* methods is a conflict and raises —
+    the old code silently let TrainConfig win.  ``overlap`` accepts
+    the legacy bools."""
+    tc, oc = grad_compression, opt_grad_compression
+    if tc is not None and oc is not None and oc != "none" and tc != oc:
+        raise ValueError(
+            f"conflicting grad compression settings: TrainConfig."
+            f"grad_compression={tc!r} vs OptConfig.grad_compression="
+            f"{oc!r}. The OptConfig knob is a deprecated duplicate — "
+            f"set the method in ONE place (prefer TrainConfig / "
+            f"TrainSpec.compression) or make them agree.")
+    method = tc if tc is not None else (oc if oc is not None
+                                        else "none")
+    elastic = (tc is not None or grad_accum_shards is not None
+               or bool(fsdp) or method != "none")
+    if elastic:
+        if int(microbatches) > 1:
+            raise ValueError(
+                "grad_compression already accumulates over "
+                "grad_accum_shards virtual shards; set microbatches=1")
+        return TrainSpec(compression=method,
+                         accum_shards=grad_accum_shards,
+                         fsdp=bool(fsdp),
+                         overlap=_normalise_overlap(overlap),
+                         microbatches=1, rng=rng, elastic=True)
+    return TrainSpec(overlap=_normalise_overlap(overlap),
+                     microbatches=int(microbatches), rng=rng)
+
+
+# ------------------------------------------------- CLI flag cluster
+def add_train_spec_args(ap, *, microbatches: bool = True) -> None:
+    """The shared TrainSpec flag cluster — ``launch/train.py`` and
+    ``launch/dryrun.py`` both call this, so the spellings cannot
+    drift.  Pure argparse: safe before jax is imported."""
+    ap.add_argument("--grad-compression", default=None,
+                    choices=list(METHODS),
+                    help="elastic-deterministic dp exchange with this "
+                         "payload compression (error feedback for "
+                         "bf16/int8)")
+    ap.add_argument("--grad-accum-shards", type=int, default=None,
+                    help="fixed virtual shard count V for the elastic "
+                         "exchange (default: the mesh's data-parallel "
+                         "degree); a run constant — any mesh whose dp "
+                         "degree divides V resumes bit-identically")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="row-shard params/optimizer moments/error "
+                         "state over the data axes and exchange "
+                         "reduce-scatter-sized payloads")
+    ap.add_argument("--overlap", default="dispatch",
+                    choices=list(OVERLAP_MODES),
+                    help="host schedule for the collect rounds: "
+                         "serial oracle, double-buffered dispatch, or "
+                         "backward-of-next-round overlapping the "
+                         "current exchange — all bitwise identical")
+    if microbatches:
+        ap.add_argument("--microbatches", type=int, default=1,
+                        help="sequential gradient accumulation on the "
+                             "plain (non-elastic) path")
+
+
+def spec_from_args(args) -> TrainSpec:
+    """Build the spec from a namespace produced by a parser that went
+    through ``add_train_spec_args``."""
+    return spec_for(
+        grad_compression=getattr(args, "grad_compression", None),
+        grad_accum_shards=getattr(args, "grad_accum_shards", None),
+        fsdp=bool(getattr(args, "fsdp", False)),
+        overlap=getattr(args, "overlap", None),
+        microbatches=int(getattr(args, "microbatches", 1) or 1))
+
+
+# ------------------------------------------------ step-builder registry
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Everything a step builder needs besides the spec: the loss
+    callable (``loss_fn(values, batch[, rng])`` returning ``loss`` or
+    ``(loss, aux)`` per ``has_aux``), the mesh (elastic builders), and
+    the optimizer apply hook ``apply_fn(values, opt_state, grads[,
+    grad_norm=]) -> (new_values, new_opt_state, stats)``."""
+    loss_fn: Callable
+    mesh: Any = None
+    apply_fn: Optional[Callable] = None
+    has_aux: bool = False
+
+
+_STEP_BUILDERS: List[Tuple[str, Callable[[TrainSpec], bool],
+                           Callable[[TrainSpec, StepContext], Any]]] \
+    = []
+
+
+def register_step_builder(name: str,
+                          match: Callable[[TrainSpec], bool],
+                          build: Callable[[TrainSpec, StepContext],
+                                          Any],
+                          *, front: bool = True) -> None:
+    """Register a step-construction strategy.  ``match(spec)`` says
+    whether ``build(spec, ctx)`` can produce the step for a spec.
+    User registrations are prepended (last registered wins on
+    overlap); built-ins are appended at import."""
+    entry = (name, match, build)
+    if front:
+        _STEP_BUILDERS.insert(0, entry)
+    else:
+        _STEP_BUILDERS.append(entry)
+
+
+def unregister_step_builder(name: str) -> None:
+    _STEP_BUILDERS[:] = [e for e in _STEP_BUILDERS if e[0] != name]
+
+
+def step_builder_names() -> Tuple[str, ...]:
+    return tuple(e[0] for e in _STEP_BUILDERS)
+
+
+def resolve_step_builder(spec: TrainSpec):
+    """First registered strategy matching the spec, as ``(name,
+    build)``."""
+    for name, match, build in _STEP_BUILDERS:
+        if match(spec):
+            return name, build
+    raise ValueError(
+        f"no step builder matches {spec} — registered: "
+        f"{step_builder_names()}; register one with "
+        f"repro.train.spec.register_step_builder(name, match, build)")
+
+
+def build_train_step(spec: TrainSpec, *, loss_fn, mesh=None,
+                     apply_fn=None, has_aux: bool = False):
+    """Resolve and run the step builder for ``spec``.  The returned
+    step's calling convention depends on the spec (see the builders'
+    docstrings / ``make_elastic_dp_step``); elastic steps additionally
+    carry the ``n_shards/rounds/collect/...`` attribute surface."""
+    if spec.elastic and mesh is None:
+        raise ValueError(
+            "grad_compression / grad_accum_shards / fsdp require a "
+            "mesh")
+    _, build = resolve_step_builder(spec)
+    return build(spec, StepContext(loss_fn=loss_fn, mesh=mesh,
+                                   apply_fn=apply_fn, has_aux=has_aux))
+
+
+# ------------------------------------------------------------ built-ins
+def _build_plain(spec: TrainSpec, ctx: StepContext):
+    """Single-dispatch grad + update step (un-jitted: the Trainer jits
+    with its donation/sharding arguments; jitting the returned callable
+    directly also works)."""
+    import jax
+
+    with_rng = spec.rng == "fold"
+    grad_fn = jax.grad(ctx.loss_fn, has_aux=ctx.has_aux,
+                       allow_int=True)
+
+    def _core(values, opt_state, batch, rng):
+        args = (values, batch) + ((rng,) if with_rng else ())
+        if ctx.has_aux:
+            grads, mets = grad_fn(*args)
+            mets = dict(mets)
+        else:
+            grads, mets = grad_fn(*args), {}
+        new_values, new_state, stats = ctx.apply_fn(values, opt_state,
+                                                    grads)
+        mets.update(stats)
+        return new_values, new_state, mets
+
+    if with_rng:
+        def train_step(values, opt_state, batch, rng):
+            return _core(values, opt_state, batch, rng)
+    else:
+        def train_step(values, opt_state, batch):
+            return _core(values, opt_state, batch, None)
+    return train_step
+
+
+def _build_microbatch(spec: TrainSpec, ctx: StepContext):
+    """Sequential accumulation over ``spec.microbatches`` batch
+    slices via ``lax.scan``: f32 gradient/metric accumulators so the
+    mean matches the single-dispatch step to accumulation order, and a
+    per-slice folded rng so augmentation/masking noise differs across
+    microbatches (the PR-3 rng-reuse bug stays fixed)."""
+    import jax
+    import jax.numpy as jnp
+
+    if spec.rng != "fold":
+        raise ValueError(
+            "microbatch accumulation folds a per-slice rng; "
+            "rng='fold' is required")
+    n = spec.microbatches
+    grad_fn = jax.grad(ctx.loss_fn, has_aux=ctx.has_aux,
+                       allow_int=True)
+
+    def train_step(values, opt_state, batch, rng):
+        # rng is folded per microbatch — accumulation slices must not
+        # share dropout masks — and the full metrics dict rides
+        # through the scan ys (mean over slices), instead of
+        # collapsing to {"loss"}.  f32 accumulators for float leaves;
+        # non-float leaves carry empty (0,) placeholders the optimizer
+        # already treats as "no gradient".
+        def micro(g_acc, i):
+            mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // n),
+                    x.shape[0] // n), batch)
+            if ctx.has_aux:
+                g, mb_mets = grad_fn(values, mb,
+                                     jax.random.fold_in(rng, i))
+            else:
+                g = grad_fn(values, mb, jax.random.fold_in(rng, i))
+                mb_mets = {}
+            g_acc = jax.tree.map(
+                lambda a, b: a + jnp.asarray(b, a.dtype)
+                if jnp.issubdtype(jnp.asarray(a).dtype,
+                                  jnp.floating) and a.size
+                else a, g_acc, g)
+            return g_acc, mb_mets
+
+        zeros = jax.tree.map(
+            lambda v: jnp.zeros(v.shape, jnp.float32)
+            if jnp.issubdtype(v.dtype, jnp.floating)
+            else jnp.zeros((0,)), values)
+        grads, mets_stack = jax.lax.scan(
+            micro, zeros, jnp.arange(n))
+        grads = jax.tree.map(
+            lambda g: g / n
+            if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating)
+            and g.size else g, grads)
+        mets = jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                            mets_stack)
+        new_values, new_state, stats = ctx.apply_fn(values, opt_state,
+                                                    grads)
+        mets = dict(mets)
+        mets.update(stats)
+        return new_values, new_state, mets
+
+    return train_step
+
+
+def _build_elastic(spec: TrainSpec, ctx: StepContext):
+    """Both elastic builders: the fsdp split is a spec field straight
+    through to ``make_elastic_dp_step``; registering them separately
+    keeps each independently replaceable."""
+    from repro.dist import compression
+    return compression.make_elastic_dp_step(
+        ctx.loss_fn, ctx.mesh, spec.compression,
+        accum_shards=spec.accum_shards, has_aux=ctx.has_aux,
+        with_rng=spec.rng == "fold", apply_fn=ctx.apply_fn,
+        fsdp=spec.fsdp, overlap=spec.overlap)
+
+
+register_step_builder(
+    "plain",
+    lambda s: not s.elastic and s.microbatches == 1,
+    _build_plain, front=False)
+register_step_builder(
+    "microbatch",
+    lambda s: not s.elastic and s.microbatches > 1,
+    _build_microbatch, front=False)
+register_step_builder(
+    "elastic-dp",
+    lambda s: s.elastic and not s.fsdp,
+    _build_elastic, front=False)
+register_step_builder(
+    "elastic-fsdp",
+    lambda s: s.elastic and s.fsdp,
+    _build_elastic, front=False)
+
+
+# ------------------------------------------------------- layout facade
+# Policy-level re-exports of the dist.compression layout rules.
+# launch/ and configs/ consume the exchange exclusively through these
+# (tests/test_layering.py bans them from the internals); jax is
+# imported lazily so the flag cluster above works pre-XLA_FLAGS.
+
+def dp_degree(mesh) -> int:
+    """The mesh's data-parallel degree D."""
+    from repro.dist import compression
+    return compression.dp_shard_count(mesh)
+
+
+def err_partition_spec(mesh):
+    """PartitionSpec sharding a leading row axis (error-state rows,
+    per-round batch rows, fsdp parameter rows) over the data axes."""
+    from repro.dist import compression
+    return compression.dp_partition_spec(mesh)
+
+
+def err_sharding(mesh):
+    """``err_partition_spec`` as a NamedSharding."""
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, err_partition_spec(mesh))
+
+
+def zeros_error_state(spec: TrainSpec, values, mesh):
+    """Fresh per-virtual-shard error-feedback state for an elastic
+    spec ([V, ...] per float leaf)."""
+    from repro.dist import compression
+    return compression.zeros_error_state(values,
+                                         spec.resolve_accum(mesh))
+
+
+def error_state_shapes(spec: TrainSpec, mesh):
+    """``values ShapeDtypeStructs -> error-state ShapeDtypeStructs``
+    (AOT surface for dryrun cells)."""
+    import jax
+    from repro.dist import compression
+    V = spec.resolve_accum(mesh)
+
+    def err_shapes(values_sds):
+        return jax.eval_shape(
+            lambda v: compression.zeros_error_state(v, V), values_sds)
+    return err_shapes
+
+
+def state_shardings(spec: TrainSpec, tree, mesh):
+    """Sharding tree for params/moments under this spec: fsdp
+    row-shards V-divisible float leaves, everything else (and every
+    leaf of a non-fsdp spec) replicates."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.dist import compression
+    if spec.elastic and spec.fsdp:
+        return compression.fsdp_shardings(tree, mesh,
+                                          spec.resolve_accum(mesh))
+    repl = NamedSharding(mesh, PartitionSpec())
+    import jax
+    return jax.tree.map(lambda _: repl, tree)
+
+
+def payload_metrics(spec: TrainSpec, values, mesh) -> dict:
+    """Per-step exchange accounting for an elastic spec, as logged
+    into the Trainer history rows (and schema-checked by
+    ``repro.train.metrics.validate_history``):
+
+      payload_bytes        compressed bytes ONE virtual shard ships
+      exchange_fraction    vs the uncompressed f32 payload
+      exchange_shards      V
+      exchange_fsdp        0/1
+      exchange_wire_bytes  per-device bytes through the payload
+                           collective per step: the fsdp ordered
+                           reduce-scatter ships payload x rounds, the
+                           dp all-gather payload x V
+    """
+    from repro.dist import compression
+    V = spec.resolve_accum(mesh)
+    D = compression.dp_shard_count(mesh)
+    pb = compression.payload_bytes(values, spec.compression)
+    full = compression.payload_bytes(values, "none")
+    return {
+        "payload_bytes": int(pb),
+        "exchange_fraction": float(pb / full) if full else 0.0,
+        "exchange_shards": int(V),
+        "exchange_fsdp": int(bool(spec.fsdp)),
+        "exchange_wire_bytes": int(pb * (V // D if spec.fsdp else V)),
+    }

@@ -56,7 +56,8 @@ class TestBenchmarkSmoke:
     def test_grad_exchange_accounting(self):
         rows = {r["name"]: r["derived"] for r in self.rows
                 if r["name"].startswith("grad_exchange/")
-                and "/fsdp/" not in r["name"]}
+                and "/fsdp/" not in r["name"]
+                and "/overlap/" not in r["name"]}
         assert set(rows) == {f"grad_exchange/{m}"
                              for m in ("none", "bf16", "int8")}
 
@@ -91,6 +92,42 @@ class TestBenchmarkSmoke:
                                 d).group(1))
             ag = int(re.search(r"dp_allgather_bytes=(\d+)", d).group(1))
             assert 0 < a2a < ag, (name, d)
+
+    def test_grad_exchange_overlap_rows(self):
+        """The overlap-schedule rows: serial vs double-buffered vs
+        backward-overlapped for dp and fsdp at V in {4, 8}.  The wire
+        bytes must be mode-invariant within a (layout, V) group — the
+        schedule is a wall-clock knob only — and fsdp must ship fewer
+        bytes than dp at the same V."""
+        # the bench pins these rows to a 2-device mesh (1 if the
+        # caller-preset XLA_FLAGS leaves a single device)
+        m = re.search(r"host_platform_device_count=(\d+)",
+                      os.environ.get("XLA_FLAGS", ""))
+        D = 2 if (int(m.group(1)) if m else 8) >= 2 else 1
+        rows = {r["name"]: r["derived"] for r in self.rows
+                if r["name"].startswith("grad_exchange/overlap/")}
+        expected = {f"grad_exchange/overlap/{lay}/V{V}/{mode}"
+                    for lay in ("dp", "fsdp") for V in (4, 8)
+                    for mode in ("none", "dispatch", "backward")}
+        assert set(rows) == expected
+        for lay in ("dp", "fsdp"):
+            for V in (4, 8):
+                wires = {int(re.search(r"wire_bytes_per_step=(\d+)",
+                                       rows[f"grad_exchange/overlap/"
+                                            f"{lay}/V{V}/{mode}"])
+                             .group(1))
+                         for mode in ("none", "dispatch", "backward")}
+                assert len(wires) == 1, (lay, V, wires)
+        for V in (4, 8):
+            dp_w = int(re.search(
+                r"wire_bytes_per_step=(\d+)",
+                rows[f"grad_exchange/overlap/dp/V{V}/none"]).group(1))
+            fs_w = int(re.search(
+                r"wire_bytes_per_step=(\d+)",
+                rows[f"grad_exchange/overlap/fsdp/V{V}/none"]).group(1))
+            # fsdp ships one payload per ROUND (V/D rounds) vs the dp
+            # V-stack all-gather: exactly a D-fold reduction
+            assert fs_w * D == dp_w, (V, fs_w, dp_w)
 
     def test_serve_latency_rows(self):
         """All three server configs report latency percentiles under

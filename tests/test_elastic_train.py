@@ -143,13 +143,18 @@ class TestSigtermElasticResume:
         devices, SIGTERM once the first periodic checkpoint lands,
         restart with ``--mesh 4`` on the same --ckpt-dir, and compare
         the final checkpoint bit-for-bit against an uninterrupted
-        8-device run."""
+        8-device run.  The interrupted legs run ``--overlap backward``
+        while the reference keeps the default dispatch schedule — the
+        bit-compare therefore also proves overlap is wall-clock-only
+        end to end, through SIGTERM, the layout-stamp verification and
+        the re-mesh."""
         with tempfile.TemporaryDirectory() as d_int, \
                 tempfile.TemporaryDirectory() as d_ref:
             # interrupted run: SIGTERM as soon as the first periodic
             # checkpoint lands (tight poll; the run still has ~90% of
             # its steps ahead, so the preemption cannot be missed)
-            proc = launch_train([], d_int, devices=8)
+            proc = launch_train(["--overlap", "backward"], d_int,
+                                devices=8)
             deadline = time.time() + 300
             first_ckpt = os.path.join(d_int, "step_0000000003")
             while time.time() < deadline and proc.poll() is None:
@@ -169,8 +174,9 @@ class TestSigtermElasticResume:
             assert reached < STEPS, \
                 f"run completed (step {reached}) before SIGTERM landed"
             assert "preempted" in out, out
-            # elastic restart on a smaller mesh
-            proc2 = launch_train(["--mesh", "4"], d_int, devices=4)
+            # elastic restart on a smaller mesh, still backward-overlapped
+            proc2 = launch_train(["--overlap", "backward", "--mesh", "4"],
+                                 d_int, devices=4)
             out2, err2 = proc2.communicate(timeout=300)
             assert proc2.returncode == 0, err2[-2000:]
             assert f"done at step {STEPS}" in out2, out2
@@ -245,6 +251,73 @@ class TestSigtermFsdpElasticResume:
                     assert a[k].dtype == b[k].dtype, (method, k)
                     assert np.array_equal(a[k], b[k]), \
                         f"{method}: {k} diverged after fsdp resume"
+
+
+class TestOverlapEquivalence:
+    def test_every_overlap_mode_bitwise_across_meshes(self):
+        """The staged-exchange acceptance bar: ``overlap="backward"``
+        (and "dispatch") is bit-identical to the serial "none" oracle
+        for every compression method on 8/4/2/1-device meshes, over
+        multiple steps with live error-feedback state.  All modes
+        dispatch the same two compiled stage executables in the same
+        per-round order — only the host interleaving differs — so this
+        must hold exactly, not approximately."""
+        body = """
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.dist import compression as C
+        from repro.launch.mesh import make_host_mesh
+
+        V = 8
+        np.random.seed(0)
+        values = {"w": jnp.asarray(np.random.randn(16, 4), jnp.float32),
+                  "b": jnp.asarray(np.random.randn(3), jnp.float32),
+                  "codes": jnp.arange(5, dtype=jnp.int32)}
+        batches = []
+        for s in range(3):
+            r = np.random.default_rng(100 + s)
+            batches.append(
+                {"x": jnp.asarray(r.standard_normal((32, 16)),
+                                  jnp.float32),
+                 "y": jnp.asarray(r.standard_normal((32, 4)),
+                                  jnp.float32)})
+
+        def loss_fn(vals, bt):
+            pred = bt["x"] @ vals["w"] + vals["b"][:1]
+            return jnp.mean((pred - bt["y"]) ** 2)
+
+        meshes = {nd: make_host_mesh(nd) for nd in (8, 4, 2, 1)}
+
+        def run(nd, method, overlap):
+            fn = C.make_dp_grad_fn(loss_fn, meshes[nd], method,
+                                   accum_shards=V, overlap=overlap)
+            err = C.zeros_error_state(values, V)
+            gs, losses = [], []
+            for bt in batches:       # thread err: feedback stays live
+                g, err, loss = fn(values, err, bt)
+                gs.append(jax.device_get(g))
+                losses.append(float(loss))
+            return gs, jax.device_get(err), losses
+
+        for method in C.METHODS:
+            ref_gs, ref_e, ref_l = run(8, method, "none")
+            if method != "none":
+                assert any(np.abs(e).max() > 0
+                           for e in jax.tree.leaves(ref_e)), method
+            for nd in (8, 4, 2, 1):
+                for overlap in ("none", "dispatch", "backward"):
+                    gs, e, l = run(nd, method, overlap)
+                    assert l == ref_l, (method, nd, overlap)
+                    for g, rg in zip(gs, ref_gs):
+                        for k in g:
+                            assert np.array_equal(g[k], rg[k]), \\
+                                (method, nd, overlap, k)
+                    for a, b in zip(jax.tree.leaves(e),
+                                    jax.tree.leaves(ref_e)):
+                        assert np.array_equal(a, b), \\
+                            (method, nd, overlap)
+        print("PASS")
+        """
+        assert "PASS" in run_subprocess(body, timeout=800)
 
 
 class TestPayloadAccounting:

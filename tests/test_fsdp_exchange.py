@@ -21,8 +21,14 @@ exchange):
   (d) accounting: ``payload_bytes`` charges the *wire* dtype — 4
       bytes/element for method "none" even when the parameters are
       bf16 (the body casts to f32 before shipping);
-  (e) overlap: the host round loop double-buffers dispatch — round
-      r+1 is issued before round r's payloads are consumed.
+  (e) overlap: the host round scheduler honours every mode — the
+      "dispatch" double buffer issues round r+1 before round r's
+      payloads are consumed, "backward" additionally dispatches
+      forward_backward(r+1) between issuing and consuming round r's
+      exchange, "none" stays serial — all bitwise identical; and the
+      stage split really separates the work: forward_backward lowers
+      with no payload collectives, quantise_pack carries the round's
+      all-to-all.
 
 Multi-device tests run in subprocesses so XLA_FLAGS lands before jax
 initialises (same harness as tests/test_elastic_train.py).
@@ -245,9 +251,10 @@ class TestFsdpWireBytes:
 _OVERLAP_BODY = """
 import jax, jax.numpy as jnp, numpy as np, json
 from repro.dist import compression as C
+from repro.dist.hlo import collective_bytes
 from repro.launch.mesh import make_host_mesh
 
-V = 8
+V, D = 8, 4
 values = {"w": jnp.zeros((16, 4), jnp.float32)}
 batch = {"x": jnp.zeros((32, 16), jnp.float32),
          "y": jnp.zeros((32, 4), jnp.float32)}
@@ -255,9 +262,10 @@ batch = {"x": jnp.zeros((32, 16), jnp.float32),
 def loss_fn(vals, bt):
     return jnp.mean((bt["x"] @ vals["w"] - bt["y"]) ** 2)
 
-mesh = make_host_mesh(4)
+mesh = make_host_mesh(D)
 out = {}
-for overlap in (True, False):
+# every overlap spelling: the legacy bools plus the three mode names
+for overlap in (True, False, "none", "dispatch", "backward"):
     fn = C.make_dp_grad_fn(loss_fn, mesh, "none", accum_shards=V,
                            fsdp=True, overlap=overlap)
     vals = jax.device_put(values, C.fsdp_shardings(values, mesh, V))
@@ -266,29 +274,74 @@ for overlap in (True, False):
     out[str(overlap)] = {"sched": [list(s) for s in fn.last_schedule],
                          "loss": float(loss),
                          "g": np.asarray(g["w"]).tolist()}
+
+# stage placement: lower each stage module separately — the payload
+# collective must live in quantise_pack, never in forward_backward
+fn = C.make_dp_grad_fn(loss_fn, mesh, "none", accum_shards=V,
+                       fsdp=True)
+vals = jax.device_put(values, C.fsdp_shardings(values, mesh, V))
+vals_full = fn.gather(vals)
+err = C.zeros_error_state(values, V)
+e_r = jax.tree.map(lambda x: x[np.arange(D)], err)
+b_r = jax.tree.map(
+    lambda x: x.reshape((V, x.shape[0] // V) + x.shape[1:])[:D], batch)
+fb_out = fn.forward_backward(vals_full, b_r, None, jnp.int32(0))
+fbc = collective_bytes(fn.forward_backward.lower(
+    vals_full, b_r, None, jnp.int32(0)).compile().as_text())
+qpc = collective_bytes(fn.quantise_pack.lower(
+    fb_out[0], e_r).compile().as_text())
+out["stages"] = {
+    "payload": C.payload_bytes(values, "none"),
+    "fb_ag": fbc["per_op_bytes"].get("all-gather", 0),
+    "fb_a2a": fbc["per_op_bytes"].get("all-to-all", 0),
+    "qp_a2a": qpc["per_op_bytes"].get("all-to-all", 0),
+}
 print(json.dumps(out))
 """
 
 
 class TestOverlapSchedule:
-    def test_round_r_plus_1_issued_before_r_consumed(self):
+    def test_overlap_schedules_and_stage_placement(self):
         res = json.loads(
             run_subprocess(_OVERLAP_BODY, devices=4)
             .strip().splitlines()[-1])
+        stages = res.pop("stages")
         ov = [tuple(s) for s in res["True"]["sched"]]
         seq = [tuple(s) for s in res["False"]["sched"]]
+        bk = [tuple(s) for s in res["backward"]["sched"]]
         L = 2                                        # V=8 on 4 devices
-        issues = [r for op, r in ov if op == "issue"]
-        consumes = [r for op, r in ov if op == "consume"]
-        assert issues == list(range(L)) and consumes == list(range(L))
+        for sched in (ov, seq, bk):
+            issues = [r for op, r in sched if op == "issue"]
+            consumes = [r for op, r in sched if op == "consume"]
+            fbs = [r for op, r in sched if op == "fb"]
+            assert issues == list(range(L)), sched
+            assert consumes == list(range(L)), sched
+            assert fbs == list(range(L)), sched
+        # the legacy bools are aliases for the mode names
+        assert res["True"]["sched"] == res["dispatch"]["sched"]
+        assert res["False"]["sched"] == res["none"]["sched"]
         for r in range(L - 1):
             # double buffering: issue(r+1) strictly before consume(r)
             assert ov.index(("issue", r + 1)) < \
                 ov.index(("consume", r)), ov
-        # the sequential loop never runs ahead
-        for r in range(L - 1):
+            # the sequential loop never runs ahead
             assert seq.index(("consume", r)) < \
                 seq.index(("issue", r + 1)), seq
+            # backward overlap: forward_backward(r+1) dispatched AFTER
+            # round r's exchange is issued but BEFORE it is consumed —
+            # the backward pass hides the payload collective
+            assert bk.index(("issue", r)) < bk.index(("fb", r + 1)) \
+                < bk.index(("consume", r)), bk
         # overlap is a scheduling change only — identical numbers
-        assert res["True"]["loss"] == res["False"]["loss"]
-        assert res["True"]["g"] == res["False"]["g"]
+        # across every spelling
+        ref = res["none"]
+        for mode in ("True", "False", "dispatch", "backward"):
+            assert res[mode]["loss"] == ref["loss"], mode
+            assert res[mode]["g"] == ref["g"], mode
+        # stage placement: forward_backward ships NO payload bytes
+        # (scalar loss gathers only), quantise_pack carries the
+        # round's all-to-all — that separation is what makes the
+        # backward overlap worth anything
+        assert stages["fb_a2a"] == 0, stages
+        assert stages["fb_ag"] < stages["payload"], stages
+        assert 0 < stages["qp_a2a"] <= stages["payload"], stages

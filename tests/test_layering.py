@@ -13,7 +13,13 @@ This AST scan over ``src/repro`` enforces the seam:
 * ``models/`` never imports ``repro.serve`` (models are BELOW the
   serving layer; the replica binds them via ``bind_engine``, not the
   other way round).  ``repro.core.serve`` — a core module — stays
-  allowed.
+  allowed;
+* ``launch/`` and ``configs/`` never import ``repro.dist.compression``
+  (any form) or touch its step-construction internals
+  (``make_elastic_dp_step`` / ``combine_*``) — the training engine's
+  ``repro.train.spec`` facade (``TrainSpec`` + ``build_train_step``)
+  is the only sanctioned route, so the spec stays the single key for
+  step caching and checkpoint-layout stamping.
 
 Pure-stdlib (ast only), so CI can run it before anything jax loads.
 """
@@ -25,6 +31,12 @@ SRC = os.path.normpath(
 
 KERNEL_OPS = "repro.kernels.jpq_topk.ops"
 FUSED_TOPK = "fused_topk_over_codes"
+COMPRESSION = "repro.dist.compression"
+STEP_INTERNAL = "make_elastic_dp_step"
+
+
+def _compression_internal(attr):
+    return attr == STEP_INTERNAL or attr.startswith("combine_")
 
 
 def _py_files():
@@ -50,6 +62,7 @@ def _violations_in(path):
         tree = ast.parse(fh.read(), filename=path)
     out = []
     in_models = rel.startswith("models/")
+    above_engine = rel.startswith(("launch/", "configs/"))
     exempt = _layer_exempt(rel)
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
@@ -63,6 +76,13 @@ def _violations_in(path):
                     out.append((rel, node.lineno,
                                 f"import {alias.name} — models/ sits "
                                 f"below the serving layer"))
+                if above_engine and (
+                        alias.name == COMPRESSION
+                        or alias.name.startswith(COMPRESSION + ".")):
+                    out.append((rel, node.lineno,
+                                f"import {alias.name} — exchange "
+                                f"internals; go through the "
+                                f"repro.train.spec facade"))
         elif isinstance(node, ast.ImportFrom):
             mod = node.module or ""
             names = {a.name for a in node.names}
@@ -83,12 +103,29 @@ def _violations_in(path):
                 out.append((rel, node.lineno,
                             f"from {mod} import {sorted(names)} — "
                             f"models/ sits below the serving layer"))
+            if above_engine:
+                if mod == COMPRESSION or mod.startswith(COMPRESSION + "."):
+                    out.append((rel, node.lineno,
+                                f"from {mod} import {sorted(names)} — "
+                                f"exchange internals; go through the "
+                                f"repro.train.spec facade"))
+                elif (mod == "repro.dist" and "compression" in names):
+                    out.append((rel, node.lineno,
+                                f"from {mod} import compression — "
+                                f"exchange internals; go through the "
+                                f"repro.train.spec facade"))
         elif isinstance(node, ast.Attribute):
             # sharded.fused_topk_over_codes(...) attribute access
             if not exempt and node.attr == FUSED_TOPK:
                 out.append((rel, node.lineno,
                             f".{FUSED_TOPK} attribute access — scorer "
                             f"internals; go through core.engine"))
+            if above_engine and _compression_internal(node.attr):
+                out.append((rel, node.lineno,
+                            f".{node.attr} attribute access — step "
+                            f"construction belongs to the training "
+                            f"engine; use repro.train.spec."
+                            f"build_train_step"))
     return out
 
 
@@ -121,6 +158,20 @@ def test_lint_actually_catches_violations(tmp_path):
             "x = sharded.fused_topk_over_codes\n",
         "models/bad_serve.py": "from repro.serve import Replica\n",
         "core/ok_ops.py": "from repro.kernels.jpq_topk import ops\n",
+        # ---- training-engine seam: launch//configs/ must stay on the
+        # repro.train.spec facade, never repro.dist.compression
+        "launch/bad_comp.py": "from repro.dist import compression\n",
+        "launch/bad_comp2.py": "import repro.dist.compression as C\n",
+        "configs/bad_comp.py":
+            "from repro.dist.compression import make_elastic_dp_step\n",
+        "configs/bad_attr.py":
+            "import repro.dist as d\n"
+            "x = d.compression.make_elastic_dp_step\n",
+        "launch/bad_combine.py":
+            "import repro.dist as d\n"
+            "c = d.compression.combine_fsdp\n",
+        # the same import is fine BELOW the seam (train/ owns it)
+        "train/ok_comp.py": "from repro.dist import compression\n",
     }
     global SRC
     real_src = SRC
@@ -134,4 +185,5 @@ def test_lint_actually_catches_violations(tmp_path):
                    for v in _violations_in(path)}
     finally:
         SRC = real_src
-    assert flagged == {r for r in samples if not r.startswith("core/")}
+    assert flagged == {r for r in samples
+                       if not r.startswith(("core/", "train/"))}

@@ -1,0 +1,357 @@
+"""The training engine's policy layer: TrainSpec validation, the
+legacy-kwargs shims, the step-builder registry, the checkpoint layout
+stamp, and the history schema (repro.train.metrics.validate_history).
+
+Everything here is host-side / single-device — the multi-device
+bitwise conformance lives in tests/test_elastic_train.py and
+tests/test_fsdp_exchange.py.
+"""
+import argparse
+import ast
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.train import spec as S
+from repro.train.metrics import HISTORY_SCHEMA, validate_history
+from repro.train.spec import (TrainSpec, add_train_spec_args,
+                              build_train_step, register_step_builder,
+                              resolve_step_builder, spec_for,
+                              spec_from_args, step_builder_names,
+                              unregister_step_builder)
+
+SRC = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "src", "repro"))
+
+
+# ------------------------------------------------------- spec validation
+class TestSpecValidation:
+    def test_defaults_are_the_plain_step(self):
+        s = TrainSpec()
+        assert (s.compression, s.elastic, s.microbatches) \
+            == ("none", False, 1)
+
+    def test_unknown_method_rejected(self):
+        with pytest.raises(ValueError, match="unknown grad compression"):
+            TrainSpec(compression="fp4", elastic=True)
+
+    def test_unknown_overlap_rejected(self):
+        with pytest.raises(ValueError, match="unknown overlap"):
+            TrainSpec(overlap="speculative", elastic=True)
+
+    def test_legacy_overlap_bools_rejected_on_the_spec_itself(self):
+        # bools are a spec_for-only courtesy; the spec is strict so the
+        # hash key has one spelling per mode
+        with pytest.raises(ValueError, match="unknown overlap"):
+            TrainSpec(overlap=True, elastic=True)
+
+    def test_unknown_rng_rejected(self):
+        with pytest.raises(ValueError, match="unknown rng policy"):
+            TrainSpec(rng="counter")
+
+    def test_non_elastic_rejects_elastic_knobs(self):
+        with pytest.raises(ValueError, match="elastic"):
+            TrainSpec(compression="bf16")
+        with pytest.raises(ValueError, match="elastic"):
+            TrainSpec(accum_shards=8)
+        with pytest.raises(ValueError, match="elastic"):
+            TrainSpec(fsdp=True)
+        with pytest.raises(ValueError, match="dispatch"):
+            TrainSpec(overlap="backward")
+
+    def test_elastic_rejects_microbatches(self):
+        with pytest.raises(ValueError, match="microbatches"):
+            TrainSpec(elastic=True, microbatches=4)
+
+    def test_microbatches_coerced_and_bounded(self):
+        assert TrainSpec(microbatches="3").microbatches == 3
+        with pytest.raises(ValueError, match="microbatches"):
+            TrainSpec(microbatches=0)
+
+    def test_hashable_and_cache_key_semantics(self):
+        a = TrainSpec(compression="int8", accum_shards=8, elastic=True)
+        b = TrainSpec(compression="int8", accum_shards="8", elastic=True)
+        assert a == b and hash(a) == hash(b)
+        assert len({a, b}) == 1
+
+
+# ------------------------------------------------------ spec_for shims
+class TestSpecFor:
+    def test_legacy_spellings_hash_equal(self):
+        """The deprecated OptConfig knob and the TrainConfig knob must
+        resolve to the SAME spec object value."""
+        via_tc = spec_for(grad_compression="bf16")
+        via_oc = spec_for(opt_grad_compression="bf16")
+        assert via_tc == via_oc and hash(via_tc) == hash(via_oc)
+        assert via_tc.elastic and via_tc.compression == "bf16"
+
+    def test_agreeing_duplicates_allowed(self):
+        s = spec_for(grad_compression="int8",
+                     opt_grad_compression="int8")
+        assert s.compression == "int8"
+        # "none" OptConfig spelling means unset, never a conflict
+        s = spec_for(grad_compression="int8",
+                     opt_grad_compression="none")
+        assert s.compression == "int8"
+
+    def test_conflicting_duplicates_raise(self):
+        with pytest.raises(ValueError,
+                           match="conflicting grad compression"):
+            spec_for(grad_compression="bf16",
+                     opt_grad_compression="int8")
+
+    def test_elastic_derived_from_any_knob(self):
+        assert spec_for(grad_compression="none").elastic
+        assert spec_for(grad_accum_shards=8).elastic
+        assert spec_for(fsdp=True).elastic
+        assert not spec_for().elastic
+
+    def test_elastic_plus_microbatches_raises(self):
+        with pytest.raises(ValueError, match="microbatches"):
+            spec_for(grad_compression="bf16", microbatches=2)
+
+    def test_legacy_overlap_bools(self):
+        assert spec_for(grad_compression="none",
+                        overlap=True).overlap == "dispatch"
+        assert spec_for(grad_compression="none",
+                        overlap=False).overlap == "none"
+        assert spec_for(grad_compression="none",
+                        overlap=None).overlap == "dispatch"
+        assert spec_for(grad_compression="none",
+                        overlap="backward").overlap == "backward"
+
+
+# -------------------------------------------------- CLI flag cluster
+class TestCliCluster:
+    def _parse(self, argv, **kw):
+        ap = argparse.ArgumentParser()
+        add_train_spec_args(ap, **kw)
+        return ap.parse_args(argv)
+
+    def test_roundtrip(self):
+        args = self._parse(["--grad-compression", "int8",
+                            "--grad-accum-shards", "8", "--fsdp",
+                            "--overlap", "backward"])
+        s = spec_from_args(args)
+        assert s == TrainSpec(compression="int8", accum_shards=8,
+                              fsdp=True, overlap="backward",
+                              elastic=True)
+
+    def test_defaults_resolve_to_default_spec(self):
+        assert spec_from_args(self._parse([])) == TrainSpec()
+
+    def test_microbatches_optional(self):
+        args = self._parse(["--microbatches", "4"], microbatches=True)
+        assert spec_from_args(args).microbatches == 4
+        with pytest.raises(SystemExit):
+            self._parse(["--microbatches", "4"], microbatches=False)
+
+    def test_launch_clis_share_the_cluster(self):
+        """Both launch CLIs must take their dp flags from
+        add_train_spec_args — the spellings cannot drift.  AST scan
+        (not import) so this holds pre-jax."""
+        for mod in ("train.py", "dryrun.py"):
+            path = os.path.join(SRC, "launch", mod)
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            calls = [n for n in ast.walk(tree)
+                     if isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Attribute)
+                     and n.func.attr == "add_train_spec_args"
+                     or isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Name)
+                     and n.func.id == "add_train_spec_args"]
+            assert calls, f"launch/{mod} does not call " \
+                          f"add_train_spec_args"
+            # and neither may re-declare a cluster flag on the side
+            flags = {a.value for n in ast.walk(tree)
+                     if isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Attribute)
+                     and n.func.attr == "add_argument"
+                     for a in n.args
+                     if isinstance(a, ast.Constant)}
+            assert not flags & {"--grad-compression",
+                                "--grad-accum-shards", "--fsdp",
+                                "--overlap", "--microbatches"}, \
+                f"launch/{mod} re-declares a TrainSpec cluster flag"
+
+    def test_build_parser_importable_without_jax(self):
+        """launch/train.py builds its parser before XLA_FLAGS is set —
+        importing it (and repro.train.spec) must not pull jax."""
+        code = ("import sys\n"
+                "from repro.launch.train import build_parser\n"
+                "build_parser().parse_args(['--overlap', 'backward'])\n"
+                "assert 'jax' not in sys.modules, 'jax leaked'\n")
+        env = dict(os.environ, PYTHONPATH=os.path.normpath(
+            os.path.join(SRC, "..")))
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True)
+        assert r.returncode == 0, r.stderr
+
+
+# ---------------------------------------------- constants mirror-sync
+def test_constants_mirror_dist_compression():
+    """spec.py re-declares METHODS/OVERLAP_MODES so the CLI stays
+    jax-free; the mirrors must never drift from the exchange's own."""
+    from repro.dist import compression
+    assert S.METHODS == compression.METHODS
+    assert S.OVERLAP_MODES == compression.OVERLAP_MODES
+
+
+# ------------------------------------------------- step-builder registry
+class TestRegistry:
+    def test_builtin_resolution(self):
+        assert resolve_step_builder(TrainSpec())[0] == "plain"
+        assert resolve_step_builder(
+            TrainSpec(microbatches=4))[0] == "microbatch"
+        assert resolve_step_builder(
+            TrainSpec(elastic=True))[0] == "elastic-dp"
+        assert resolve_step_builder(
+            TrainSpec(elastic=True, fsdp=True))[0] == "elastic-fsdp"
+
+    def test_register_overrides_and_unregister_restores(self):
+        spec = TrainSpec(microbatches=3)
+        sentinel = object()
+        register_step_builder(
+            "custom-mb3", lambda s: s.microbatches == 3,
+            lambda s, ctx: sentinel)
+        try:
+            assert "custom-mb3" in step_builder_names()
+            assert resolve_step_builder(spec)[0] == "custom-mb3"
+            step = build_train_step(spec, loss_fn=None)
+            assert step is sentinel
+        finally:
+            unregister_step_builder("custom-mb3")
+        assert resolve_step_builder(spec)[0] == "microbatch"
+        assert "custom-mb3" not in step_builder_names()
+
+    def test_no_match_is_actionable(self):
+        # empty the registry temporarily
+        saved = list(S._STEP_BUILDERS)
+        try:
+            S._STEP_BUILDERS[:] = []
+            with pytest.raises(ValueError,
+                               match="register_step_builder"):
+                resolve_step_builder(TrainSpec())
+        finally:
+            S._STEP_BUILDERS[:] = saved
+
+    def test_elastic_without_mesh_raises(self):
+        with pytest.raises(ValueError, match="mesh"):
+            build_train_step(TrainSpec(elastic=True), loss_fn=None)
+
+
+# ----------------------------------------------- checkpoint layout stamp
+class TestLayoutStamp:
+    def test_stamp_contents(self):
+        s = TrainSpec(compression="int8", accum_shards=8, elastic=True)
+        d = s.layout_stamp()
+        assert d["compression"] == "int8"
+        assert d["resolved_accum_shards"] == 8
+        for k in S._LAYOUT_KEYS:
+            assert k in d
+
+    def test_empty_stamp_passes(self):
+        # pre-stamp checkpoints restore unchecked
+        S.check_restore_layout(None, TrainSpec(), None)
+        S.check_restore_layout({}, TrainSpec(), None)
+
+    def test_matching_stamp_passes(self):
+        s = TrainSpec(compression="bf16", accum_shards=8, elastic=True)
+        stamp = dict(s.layout_stamp())
+        stamp["resolved_accum_shards"] = 8
+        S.check_restore_layout(stamp, s, 8)
+
+    def test_wallclock_fields_not_enforced(self):
+        a = TrainSpec(compression="bf16", accum_shards=8,
+                      overlap="backward", elastic=True)
+        b = TrainSpec(compression="bf16", accum_shards=8,
+                      overlap="none", rng="none", elastic=True)
+        stamp = dict(a.layout_stamp())
+        stamp["resolved_accum_shards"] = 8
+        S.check_restore_layout(stamp, b, 8)   # must not raise
+
+    def test_layout_mismatch_raises_actionably(self):
+        a = TrainSpec(compression="bf16", accum_shards=8, elastic=True)
+        b = TrainSpec(compression="int8", accum_shards=8, elastic=True)
+        stamp = dict(a.layout_stamp())
+        stamp["resolved_accum_shards"] = 8
+        with pytest.raises(ValueError,
+                           match="compression.*--grad-compression"):
+            S.check_restore_layout(stamp, b, 8)
+
+    def test_resolved_accum_mismatch_raises(self):
+        s = TrainSpec(compression="bf16", accum_shards=8, elastic=True)
+        stamp = dict(s.layout_stamp())
+        stamp["resolved_accum_shards"] = 8
+        with pytest.raises(ValueError, match="resolved_accum_shards"):
+            S.check_restore_layout(stamp, s, 4)
+
+    def test_checkpoint_metadata_roundtrip(self, tmp_path):
+        import numpy as np
+        from repro.ckpt import checkpoint_metadata, save_checkpoint
+        d = str(tmp_path / "ck")
+        assert checkpoint_metadata(d) == {}
+        s = TrainSpec(compression="int8", accum_shards=8, elastic=True)
+        meta = {"train_spec": s.layout_stamp()}
+        save_checkpoint(d, {"w": np.zeros((2,))}, 3, metadata=meta)
+        got = checkpoint_metadata(d)
+        assert got["train_spec"]["compression"] == "int8"
+        assert got["train_spec"]["resolved_accum_shards"] == 8
+        # the stamp round-trips through json into check_restore_layout
+        S.check_restore_layout(got["train_spec"], s, 8)
+        with pytest.raises(ValueError, match="layout"):
+            S.check_restore_layout(
+                got["train_spec"],
+                TrainSpec(compression="int8", accum_shards=8,
+                          fsdp=True, elastic=True), 8)
+
+
+# ----------------------------------------------------- history schema
+class TestHistorySchema:
+    def _row(self, **kw):
+        row = {"step": 0, "sec": 0.01, "loss": 1.5}
+        row.update(kw)
+        return row
+
+    def test_valid_history_passes(self):
+        hist = [self._row(step=0, payload_bytes=100,
+                          exchange_wire_bytes=800, exchange_shards=8,
+                          exchange_fsdp=0, exchange_fraction=0.25),
+                self._row(step=1)]
+        assert validate_history(hist) == []
+
+    def test_schema_covers_trainer_payload_keys(self):
+        for k in ("payload_bytes", "exchange_wire_bytes",
+                  "exchange_shards", "exchange_fsdp",
+                  "exchange_fraction"):
+            assert k in HISTORY_SCHEMA
+
+    def test_missing_step_flagged(self):
+        assert any("step" in p for p in validate_history([{"sec": 1.0}]))
+
+    def test_wrong_type_flagged(self):
+        probs = validate_history([self._row(loss="high")])
+        assert any("loss" in p for p in probs)
+
+    def test_bool_is_not_an_int(self):
+        probs = validate_history([self._row(payload_bytes=True)])
+        assert any("payload_bytes" in p for p in probs)
+
+    def test_negative_flagged(self):
+        probs = validate_history([self._row(sec=-1.0)])
+        assert any("sec" in p for p in probs)
+
+    def test_fraction_bounds(self):
+        probs = validate_history(
+            [self._row(exchange_fraction=1.5)])
+        assert any("exchange_fraction" in p for p in probs)
+
+    def test_step_monotonicity(self):
+        probs = validate_history([self._row(step=5), self._row(step=3)])
+        assert any("step" in p for p in probs)
+
+    def test_non_dict_row_flagged(self):
+        assert validate_history(["not a row"])
